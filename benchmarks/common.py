@@ -1,0 +1,59 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Sequence
+
+
+class Table:
+    def __init__(self, name: str, columns: Sequence[str]):
+        self.name = name
+        self.columns = list(columns)
+        self.rows: List[list] = []
+
+    def add(self, *row):
+        assert len(row) == len(self.columns), (row, self.columns)
+        self.rows.append(list(row))
+
+    def show(self) -> None:
+        widths = [
+            max(len(str(c)), *(len(str(r[i])) for r in self.rows), 4)
+            for i, c in enumerate(self.columns)
+        ] if self.rows else [len(str(c)) for c in self.columns]
+        print(f"\n== {self.name} ==")
+        print("  ".join(str(c).ljust(w) for c, w in zip(self.columns, widths)))
+        for r in self.rows:
+            print("  ".join(str(v).ljust(w) for v, w in zip(r, widths)))
+
+    def csv_lines(self) -> List[str]:
+        out = []
+        for r in self.rows:
+            out.append(f"{self.name}," + ",".join(str(v) for v in r))
+        return out
+
+
+def timed(fn: Callable, *args, repeats: int = 3, warmup: int = 1):
+    """Median wall-time of fn(*args) in seconds (after block_until_ready)."""
+    import jax
+
+    for _ in range(warmup):
+        r = fn(*args)
+        jax.block_until_ready(r)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        jax.block_until_ready(r)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2], r
+
+
+def fmt(x, nd=1):
+    if x is None:
+        return "-"
+    if isinstance(x, float):
+        if x >= 100:
+            return f"{x:.0f}"
+        return f"{x:.{nd}f}"
+    return str(x)

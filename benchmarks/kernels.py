@@ -1,0 +1,78 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs jnp oracle, allclose + time.
+
+On CPU the Pallas interpreter is orders of magnitude slower than XLA (it
+executes the kernel body in Python) — the timing column here verifies the
+harness, not TPU performance; correctness is the contract.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Table, fmt, timed
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def kernel_allclose() -> Table:
+    t = Table("kernels", ["kernel", "shape", "oracle_us", "maxdiff"])
+
+    # expert_ffn
+    E, C, D, F = 4, 256, 256, 256
+    ks = jax.random.split(KEY, 4)
+    x = (jax.random.normal(ks[0], (E, C, D)) * 0.3).astype(jnp.bfloat16)
+    wg = (jax.random.normal(ks[1], (E, D, F)) * 0.05).astype(jnp.bfloat16)
+    wu = (jax.random.normal(ks[2], (E, D, F)) * 0.05).astype(jnp.bfloat16)
+    wd = (jax.random.normal(ks[3], (E, F, D)) * 0.05).astype(jnp.bfloat16)
+    t_us, want = timed(jax.jit(ref.expert_ffn_ref), x, wg, wu, wd)
+    got = ops.expert_ffn(x, wg, wu, wd, interpret=True)
+    d = float(jnp.max(jnp.abs(got.astype(jnp.float32) -
+                              want.astype(jnp.float32))))
+    t.add("expert_ffn", f"{E}x{C}x{D}x{F}", fmt(t_us * 1e6), f"{d:.2e}")
+
+    # decode attention
+    B, H, K, hd, S = 4, 8, 2, 64, 1024
+    q = jax.random.normal(ks[0], (B, H, hd))
+    kk = jax.random.normal(ks[1], (B, S, K, hd))
+    vv = jax.random.normal(ks[2], (B, S, K, hd))
+    t_us, want = timed(
+        jax.jit(lambda a, b, c: ref.decode_attention_ref(a, b, c, 900)),
+        q, kk, vv,
+    )
+    got = ops.decode_attention(q, kk, vv, jnp.int32(900), interpret=True)
+    d = float(jnp.max(jnp.abs(got - want)))
+    t.add("decode_attention", f"{B}x{H}x{S}x{hd}", fmt(t_us * 1e6), f"{d:.2e}")
+
+    # ssd chunk scan
+    Bt, Ss, nh, hp, ns = 2, 256, 4, 32, 16
+    x2 = jax.random.normal(ks[0], (Bt, Ss, nh, hp)) * 0.5
+    Bi = jax.random.normal(ks[1], (Bt, Ss, ns)) * 0.5
+    Ci = jax.random.normal(ks[2], (Bt, Ss, ns)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (Bt, Ss, nh)))
+    A = -jnp.exp(jax.random.normal(ks[0], (nh,)) * 0.3)
+    from repro.models.ssm import ssd_scan as ssd_jnp
+
+    t_us, (y_ref, h_ref) = timed(
+        jax.jit(lambda *a: ssd_jnp(*a, 64)), x2, Bi, Ci, dt, A
+    )
+    y, h = ops.ssd_scan(x2, Bi, Ci, dt, A, 64, interpret=True)
+    d = float(jnp.max(jnp.abs(y - y_ref)))
+    t.add("ssd_scan", f"{Bt}x{Ss}x{nh}x{hp}", fmt(t_us * 1e6), f"{d:.2e}")
+
+    # flash attention
+    q3 = jax.random.normal(ks[0], (2, 512, 4, 64))
+    k3 = jax.random.normal(ks[1], (2, 512, 2, 64))
+    v3 = jax.random.normal(ks[2], (2, 512, 2, 64))
+    t_us, want = timed(
+        jax.jit(lambda a, b, c: ref.flash_attention_ref(
+            a, jnp.repeat(b, 2, 2), jnp.repeat(c, 2, 2))),
+        q3, k3, v3,
+    )
+    got = ops.flash_attention(q3, k3, v3, interpret=True)
+    d = float(jnp.max(jnp.abs(got - want)))
+    t.add("flash_attention", "2x512x4x64", fmt(t_us * 1e6), f"{d:.2e}")
+    return t
+
+
+ALL = [kernel_allclose]

@@ -1,0 +1,30 @@
+"""Benchmark harness: one table per paper table/figure.
+
+Prints human tables plus ``name,...`` CSV lines.  Cost-model tables use the
+paper's A5000 hardware constants; engine/kernel tables measure real
+execution on this machine.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import engine_walltime, kernels, paper_tables
+
+    suites = list(paper_tables.ALL) + list(engine_walltime.ALL) + list(kernels.ALL)
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    csv = []
+    for fn in suites:
+        if only and only not in fn.__name__:
+            continue
+        table = fn()
+        table.show()
+        csv.extend(table.csv_lines())
+    print("\n--- CSV ---")
+    for line in csv:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

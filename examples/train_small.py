@@ -1,0 +1,56 @@
+"""Train a ~100M-parameter MoE for a few hundred steps on CPU.
+
+    PYTHONPATH=src python examples/train_small.py [--steps 200]
+"""
+import argparse
+from dataclasses import replace
+
+import jax
+
+from repro.configs import get_config
+from repro.data.datasets import synthetic_batches
+from repro.models import model as M
+from repro.train.train_loop import train_loop
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--checkpoint", default="/tmp/repro_ckpt.npz")
+    args = ap.parse_args()
+
+    # a ~100M-param OLMoE-family model (keeps the 64e top-8 routing scaled to 8e)
+    base = get_config("olmoe-1b-7b", smoke=True)
+    cfg = replace(
+        base,
+        name="olmoe-100m",
+        num_layers=4,
+        d_model=512,
+        num_heads=8,
+        num_kv_heads=8,
+        head_dim=64,
+        num_experts=8,
+        experts_per_token=2,
+        moe_d_ff=1024,
+        vocab_size=32_000,
+    )
+    n = cfg.param_counts()["total"]
+    print(f"training {cfg.name}: {n/1e6:.0f}M params, "
+          f"{args.steps} steps of {args.batch}x{args.seq}")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batches = iter(
+        (jax.numpy.asarray(t), jax.numpy.asarray(l))
+        for t, l in synthetic_batches(cfg.vocab_size, args.batch, args.seq)
+    )
+    params, _, history = train_loop(
+        cfg, params, batches, steps=args.steps, lr=1e-3, log_every=20,
+        checkpoint_path=args.checkpoint, checkpoint_every=100,
+    )
+    assert history[-1]["loss"] < history[0]["loss"], "loss did not decrease"
+    print("final loss:", history[-1]["loss"])
+
+
+if __name__ == "__main__":
+    main()

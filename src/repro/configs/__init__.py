@@ -1,0 +1,17 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    SHAPES,
+    ModelConfig,
+    ShapeSpec,
+    get_config,
+    list_archs,
+)
+
+__all__ = [
+    "ARCH_IDS",
+    "SHAPES",
+    "ModelConfig",
+    "ShapeSpec",
+    "get_config",
+    "list_archs",
+]

@@ -1,0 +1,139 @@
+"""Cost models of the baseline systems the paper compares against (§3, §5).
+
+All baselines use *model-based batching*: one unified batch size through the
+whole forward pass, with the KV-cache resident in device memory (which is
+what bounds their batch).  They differ in fetch scheduling:
+
+* ``deepspeed``      — on-demand weight fetch, no compute/copy overlap
+                        (DeepSpeed-Inference offloading).
+* ``flexgen``        — fetched weights reused across several rounds of
+                        micro-batches whose KV lives in host memory;
+                        partial overlap.
+* ``moe-lightning``  — same batching, full GPU-CPU-I/O overlap (their
+                        HRM pipeline) + weight reuse.
+* ``vllm``           — continuous batching: decode batch additionally
+                        degraded by interleaved size-1 prefills (the paper's
+                        observation that TTFT-oriented scheduling shrinks
+                        decode batches).
+
+These reproduce the *mechanisms* the paper attributes to each system, not
+vendor-tuned kernels; EXPERIMENTS.md compares the resulting ratios against
+the paper's Tables 1/4/6/7/8/9.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+from repro.configs.base import ModelConfig
+from repro.core import workload as W
+from repro.core.dag_builder import (
+    PhaseEstimate,
+    Plan,
+    build_decode_layer_dag,
+    build_prefill_layer_dag,
+    _layer_types,
+)
+from repro.core.hardware import HardwareProfile
+
+SYSTEMS = ("deepspeed", "flexgen", "moe-lightning", "vllm")
+
+
+def model_based_batch_limit(cfg: ModelConfig, hw: HardwareProfile, ctx: int) -> int:
+    """Unified batch bounded by device-resident KV + attention peak memory."""
+    per_seq = W.kv_bytes_per_seq(cfg, ctx)
+    overhead = W.dense_module_bytes_per_layer(cfg)
+    if cfg.has_moe:
+        overhead += cfg.num_experts * W.expert_weight_bytes(cfg) / cfg.num_layers
+    free = hw.device_mem_bytes * 0.8 - overhead
+    if per_seq <= 0:
+        per_seq = 4 * cfg.d_model * W.BYTES
+    # attention intermediate states also scale with B (paper §5.3: DeepSpeed
+    # batch bounded by attention peak memory)
+    per_seq += W.intermediate_bytes_decode(cfg, 1, ctx)
+    return max(1, int(free / per_seq))
+
+
+def _combine(cfg, hw, plan, ctx, phase, system, seq=None) -> PhaseEstimate:
+    t_model = 0.0
+    htod = dtoh = 0.0
+    layer_times: Dict[str, float] = {}
+    for (kind, ffn), count in _layer_types(cfg).items():
+        if phase == "decode":
+            dag = build_decode_layer_dag(cfg, hw, plan, ctx, kind, ffn)
+        else:
+            dag = build_prefill_layer_dag(cfg, hw, plan, seq, kind, ffn)
+        busy = dag.channel_busy()
+        if system == "deepspeed":
+            # on-demand, serialized copy -> compute
+            t = busy["gpu"] + busy["htod"] + busy["dtoh"] + busy["cpu"]
+        elif system == "flexgen":
+            # partial overlap: half the copy hidden behind compute
+            t = max(busy["gpu"], busy["htod"]) + 0.5 * min(
+                busy["gpu"], busy["htod"]
+            ) + busy["dtoh"]
+        else:  # moe-lightning, vllm: fully pipelined channels
+            t = max(busy["gpu"], busy["htod"], busy["cpu"]) + busy["dtoh"]
+        layer_times[f"{kind}+{ffn}"] = t
+        t_model += t * count
+        htod += busy["htod"] * hw.htod_bw * count
+        dtoh += busy["dtoh"] * hw.dtoh_bw * count
+    t_model += hw.gemm_time(
+        plan.B * W.lm_head_flops(cfg), 0.0,
+        plan.B * cfg.vocab_size * W.BYTES, plan.B,
+    )
+    tokens = plan.B * (seq if phase == "prefill" else 1)
+    return PhaseEstimate(
+        tokens / t_model, t_model, tokens, htod, dtoh, layer_times, []
+    )
+
+
+def estimate_baseline_decode(
+    cfg: ModelConfig,
+    hw: HardwareProfile,
+    ctx: int,
+    system: str,
+    decode_len: int = 256,
+) -> PhaseEstimate:
+    assert system in SYSTEMS
+    B = model_based_batch_limit(cfg, hw, ctx)
+    reuse = 1
+    if system in ("flexgen", "moe-lightning"):
+        # rounds whose KV fits host memory, reusing fetched weights
+        host_free = hw.host_mem_bytes - W.model_bytes(cfg)
+        per_round = max(B * W.kv_bytes_per_seq(cfg, ctx), 1.0)
+        cap = 2 if system == "flexgen" else 4
+        reuse = int(max(1, min(cap, host_free / per_round)))
+    plan = Plan(
+        B=B, b_a=B, b_e=1 << 30, omega=0.0,
+        s_expert=0.0, s_params=0.0, phase="decode",
+        kv_on_gpu=True, weight_reuse=reuse,
+    )
+    est = _combine(cfg, hw, plan, ctx, "decode", system)
+    if system == "vllm":
+        # continuous batching: each finished sequence triggers a size-1
+        # prefill that stalls decode (paper §3: prefill batches of size 1)
+        t_prefill_1 = _combine(
+            cfg, hw,
+            Plan(B=1, b_a=1, b_e=1 << 30, phase="prefill", kv_on_gpu=True),
+            ctx, "prefill", "moe-lightning", seq=ctx,
+        ).t_model
+        stall_per_step = (B / max(decode_len, 1)) * t_prefill_1 / max(B, 1)
+        t = est.t_model + stall_per_step * B
+        est = PhaseEstimate(
+            est.tokens / t, t, est.tokens, est.htod_bytes, est.dtoh_bytes,
+            est.layer_times, [],
+        )
+    return est
+
+
+def estimate_baseline_prefill(
+    cfg: ModelConfig, hw: HardwareProfile, seq: int, system: str
+) -> PhaseEstimate:
+    assert system in SYSTEMS
+    B = model_based_batch_limit(cfg, hw, seq)
+    plan = Plan(
+        B=B, b_a=B, b_e=1 << 30, phase="prefill",
+        kv_on_gpu=True, weight_reuse=1,
+    )
+    return _combine(cfg, hw, plan, seq, "prefill", system, seq=seq)

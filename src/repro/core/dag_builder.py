@@ -1,0 +1,370 @@
+"""Build MoE-offloading job DAGs (paper Fig. 6) and estimate phase runtimes.
+
+One DAG is built per *distinct layer type* (attention+MoE, attention+dense,
+SSM+MoE, ...) and the model time sums layer-type times weighted by their
+census — matching the paper's per-layer DAG with P-D disaggregation
+(separate DAG classes for prefill and decode).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.core import workload as W
+from repro.core.dag import JobDag
+from repro.core.hardware import HardwareProfile
+
+
+@dataclass(frozen=True)
+class Plan:
+    """A module-based batching strategy (the search variables of Table 2)."""
+
+    B: int                 # accumulated batch (sequences) at the MoE stage
+    b_a: int               # attention micro-batch (sequences)
+    b_e: int               # expert micro-batch (tokens)
+    omega: float = 0.0     # fraction of attention computed on the host CPU
+    s_expert: float = 0.0  # reserved expert prefetch buffer (bytes)
+    s_params: float = 0.0  # model weights cached resident on device (bytes)
+    phase: str = "decode"
+    kv_on_gpu: bool = False     # baselines keep the KV cache device-resident
+    weight_reuse: int = 1       # FlexGen-style rounds reusing fetched weights
+
+    def describe(self) -> str:
+        return (
+            f"B={self.B} b_a={self.b_a} b_e={self.b_e} w={self.omega:.1f} "
+            f"S_exp={self.s_expert/1e9:.1f}GB S_par={self.s_params/1e9:.1f}GB"
+        )
+
+
+@dataclass
+class PhaseEstimate:
+    throughput: float            # tokens/s
+    t_model: float               # seconds per full model pass
+    tokens: float                # tokens produced/consumed per pass
+    htod_bytes: float
+    dtoh_bytes: float
+    layer_times: Dict[str, float] = field(default_factory=dict)
+    critical: List[str] = field(default_factory=list)
+
+
+def _resident_fraction(cfg: ModelConfig, plan: Plan) -> float:
+    mb = W.model_bytes(cfg)
+    return min(1.0, plan.s_params / mb) if mb else 0.0
+
+
+# ---------------------------------------------------------------------------
+# Decode-phase layer DAG
+# ---------------------------------------------------------------------------
+def build_decode_layer_dag(
+    cfg: ModelConfig,
+    hw: HardwareProfile,
+    plan: Plan,
+    ctx: int,
+    kind: str,
+    ffn: str,
+) -> JobDag:
+    dag = JobDag()
+    B = plan.B
+    f_res = _resident_fraction(cfg, plan)
+    miss = (1.0 - f_res) / max(plan.weight_reuse, 1)
+
+    # ---- sequence mixer ----
+    if kind == "attn":
+        w_bytes = W.attn_weight_bytes(cfg) * miss
+        cp_w = dag.add("attn_weights_htod", "htod", w_bytes / hw.htod_bw)
+        n_gpu = int(round(B * (1.0 - plan.omega)))
+        n_cpu = B - n_gpu
+        pre = dag.add(
+            "pre_attn",
+            "gpu",
+            hw.gemm_time(
+                B * W.pre_attn_flops(cfg),
+                0.0,
+                B * 3 * cfg.d_model * W.BYTES,
+                B,
+            ),
+            deps=[cp_w],
+        )
+        done_attn: List[int] = []
+        if n_cpu:
+            qd = dag.add(
+                "qkv_dtoh",
+                "dtoh",
+                n_cpu * 3 * cfg.num_heads * cfg.head_dim * W.BYTES / hw.dtoh_bw,
+                deps=[pre],
+            )
+            cpu = dag.add(
+                "cpu_self_attn",
+                "cpu",
+                hw.cpu_attn_time(
+                    n_cpu * W.attn_mech_flops_decode(cfg, ctx),
+                    n_cpu * ctx * W.kv_bytes_per_token_layer(cfg),
+                ),
+                deps=[qd],
+            )
+            back = dag.add(
+                "attn_out_htod",
+                "htod",
+                n_cpu * cfg.num_heads * cfg.head_dim * W.BYTES / hw.htod_bw,
+                deps=[cpu],
+            )
+            done_attn.append(back)
+        if n_gpu:
+            b_a = max(1, min(plan.b_a, n_gpu))
+            n_micro = -(-n_gpu // b_a)
+            span = min(ctx, cfg.sliding_window) if cfg.sliding_window else ctx
+            for m in range(n_micro):
+                rows = min(b_a, n_gpu - m * b_a)
+                kv_bytes = rows * span * W.kv_bytes_per_token_layer(cfg)
+                deps = [pre]
+                if not plan.kv_on_gpu:
+                    deps.append(
+                        dag.add(f"kv_fetch[{m}]", "htod", kv_bytes / hw.htod_bw)
+                    )
+                g = dag.add(
+                    f"gpu_self_attn[{m}]",
+                    "gpu",
+                    hw.gemm_time(
+                        rows * W.attn_mech_flops_decode(cfg, ctx),
+                        0.0,
+                        kv_bytes,
+                        rows,
+                    ),
+                    deps=deps,
+                )
+                done_attn.append(g)
+        post = dag.add(
+            "post_attn",
+            "gpu",
+            hw.gemm_time(
+                B * W.post_attn_flops(cfg), 0.0,
+                B * 2 * cfg.d_model * W.BYTES, B,
+            ),
+            deps=done_attn or [pre],
+        )
+        dag.add(
+            "kv_append_dtoh",
+            "dtoh",
+            B * W.kv_bytes_per_token_layer(cfg) / hw.dtoh_bw,
+            deps=[post],
+        )
+        mixer_done = post
+    else:  # SSM layer: dense module, state stays on device/host
+        w_bytes = W.ssm_weight_bytes(cfg) * miss
+        cp_w = dag.add("ssm_weights_htod", "htod", w_bytes / hw.htod_bw)
+        mixer_done = dag.add(
+            "ssm_step",
+            "gpu",
+            hw.gemm_time(
+                B * W.ssm_flops_per_token(cfg),
+                0.0,
+                B * 4 * cfg.d_model * W.BYTES,
+                B,
+            ),
+            deps=[cp_w],
+        )
+
+    # ---- FFN stage ----
+    if ffn == "moe":
+        router = dag.add(
+            "router",
+            "gpu",
+            hw.gemm_time(B * W.router_flops(cfg), 0.0, 0.0, B),
+            deps=[mixer_done],
+        )
+        tokens_per_expert = B * cfg.experts_per_token / cfg.num_experts
+        e_bytes = W.expert_weight_bytes(cfg) * miss
+        for e in range(cfg.num_experts):
+            cp = dag.add(f"expert_w[{e}]", "htod", e_bytes / hw.htod_bw)
+            b_e = max(1, min(plan.b_e, int(tokens_per_expert) or 1))
+            n_chunk = max(1, -(-int(round(tokens_per_expert)) // b_e))
+            for c in range(n_chunk):
+                rows = tokens_per_expert / n_chunk
+                dag.add(
+                    f"expert[{e}.{c}]",
+                    "gpu",
+                    hw.gemm_time(
+                        rows * W.expert_flops_per_token(cfg),
+                        0.0,
+                        rows * 2 * cfg.d_model * W.BYTES,
+                        int(max(rows, 1)),
+                    ),
+                    deps=[cp, router],
+                )
+    elif cfg.d_ff > 0:
+        w_bytes = W.dense_ffn_weight_bytes(cfg) * miss
+        cp = dag.add("ffn_w_htod", "htod", w_bytes / hw.htod_bw)
+        dag.add(
+            "dense_ffn",
+            "gpu",
+            hw.gemm_time(
+                B * W.dense_ffn_flops(cfg),
+                0.0,
+                B * 2 * cfg.d_model * W.BYTES,
+                B,
+            ),
+            deps=[cp, mixer_done],
+        )
+    return dag
+
+
+# ---------------------------------------------------------------------------
+# Prefill-phase layer DAG (no KV fetch; GPU-only compute — paper §5.3)
+# ---------------------------------------------------------------------------
+def build_prefill_layer_dag(
+    cfg: ModelConfig,
+    hw: HardwareProfile,
+    plan: Plan,
+    seq: int,
+    kind: str,
+    ffn: str,
+) -> JobDag:
+    dag = JobDag()
+    B = plan.B
+    T = B * seq
+    f_res = _resident_fraction(cfg, plan)
+    miss = (1.0 - f_res) / max(plan.weight_reuse, 1)
+
+    if kind == "attn":
+        w_bytes = W.attn_weight_bytes(cfg) * miss
+        cp_w = dag.add("attn_weights_htod", "htod", w_bytes / hw.htod_bw)
+        b_a = max(1, min(plan.b_a, B))
+        n_micro = -(-B // b_a)
+        outs = []
+        for m in range(n_micro):
+            rows = min(b_a, B - m * b_a)
+            g = dag.add(
+                f"attn_block[{m}]",
+                "gpu",
+                hw.gemm_time(
+                    rows * (seq * (W.pre_attn_flops(cfg) + W.post_attn_flops(cfg))
+                            + W.attn_mech_flops_prefill(cfg, seq)),
+                    0.0,
+                    rows * seq * 4 * cfg.d_model * W.BYTES,
+                    rows * seq,
+                ),
+                deps=[cp_w],
+            )
+            outs.append(g)
+        dag.add(
+            "kv_append_dtoh",
+            "dtoh",
+            T * W.kv_bytes_per_token_layer(cfg) / hw.dtoh_bw,
+            deps=outs,
+        )
+        mixer_done = outs[-1]
+    else:
+        w_bytes = W.ssm_weight_bytes(cfg) * miss
+        cp_w = dag.add("ssm_weights_htod", "htod", w_bytes / hw.htod_bw)
+        mixer_done = dag.add(
+            "ssm_scan",
+            "gpu",
+            hw.gemm_time(
+                T * W.ssm_flops_per_token(cfg),
+                0.0,
+                T * 4 * cfg.d_model * W.BYTES,
+                T,
+            ),
+            deps=[cp_w],
+        )
+
+    if ffn == "moe":
+        router = dag.add(
+            "router", "gpu",
+            hw.gemm_time(T * W.router_flops(cfg), 0.0, 0.0, T),
+            deps=[mixer_done],
+        )
+        tokens_per_expert = T * cfg.experts_per_token / cfg.num_experts
+        e_bytes = W.expert_weight_bytes(cfg) * miss
+        for e in range(cfg.num_experts):
+            cp = dag.add(f"expert_w[{e}]", "htod", e_bytes / hw.htod_bw)
+            dag.add(
+                f"expert[{e}]",
+                "gpu",
+                hw.gemm_time(
+                    tokens_per_expert * W.expert_flops_per_token(cfg),
+                    0.0,
+                    tokens_per_expert * 2 * cfg.d_model * W.BYTES,
+                    int(max(tokens_per_expert, 1)),
+                ),
+                deps=[cp, router],
+            )
+    elif cfg.d_ff > 0:
+        w_bytes = W.dense_ffn_weight_bytes(cfg) * miss
+        cp = dag.add("ffn_w_htod", "htod", w_bytes / hw.htod_bw)
+        dag.add(
+            "dense_ffn",
+            "gpu",
+            hw.gemm_time(
+                T * W.dense_ffn_flops(cfg),
+                0.0,
+                T * 2 * cfg.d_model * W.BYTES,
+                T,
+            ),
+            deps=[cp, mixer_done],
+        )
+    return dag
+
+
+# ---------------------------------------------------------------------------
+# Model-level estimates
+# ---------------------------------------------------------------------------
+def _layer_types(cfg: ModelConfig) -> Dict[Tuple[str, str], int]:
+    types: Dict[Tuple[str, str], int] = {}
+    for i in range(cfg.num_layers):
+        key = (cfg.layer_kind(i), cfg.ffn_kind(i))
+        types[key] = types.get(key, 0) + 1
+    return types
+
+
+def estimate_decode(
+    cfg: ModelConfig, hw: HardwareProfile, plan: Plan, ctx: int
+) -> PhaseEstimate:
+    t_model = 0.0
+    htod = dtoh = 0.0
+    layer_times: Dict[str, float] = {}
+    critical: List[str] = []
+    for (kind, ffn), count in _layer_types(cfg).items():
+        dag = build_decode_layer_dag(cfg, hw, plan, ctx, kind, ffn)
+        t = dag.earliest_finish()
+        layer_times[f"{kind}+{ffn}"] = t
+        t_model += t * count
+        busy = dag.channel_busy()
+        htod += busy["htod"] * hw.htod_bw * count
+        dtoh += busy["dtoh"] * hw.dtoh_bw * count
+        if not critical:
+            critical = dag.critical_path()
+    # lm_head (+ final norm) on device
+    t_model += hw.gemm_time(
+        plan.B * W.lm_head_flops(cfg), 0.0,
+        plan.B * cfg.vocab_size * W.BYTES, plan.B,
+    )
+    tp = plan.B / t_model if t_model > 0 else 0.0
+    return PhaseEstimate(tp, t_model, plan.B, htod, dtoh, layer_times, critical)
+
+
+def estimate_prefill(
+    cfg: ModelConfig, hw: HardwareProfile, plan: Plan, seq: int
+) -> PhaseEstimate:
+    t_model = 0.0
+    htod = dtoh = 0.0
+    layer_times: Dict[str, float] = {}
+    critical: List[str] = []
+    for (kind, ffn), count in _layer_types(cfg).items():
+        dag = build_prefill_layer_dag(cfg, hw, plan, seq, kind, ffn)
+        t = dag.earliest_finish()
+        layer_times[f"{kind}+{ffn}"] = t
+        t_model += t * count
+        busy = dag.channel_busy()
+        htod += busy["htod"] * hw.htod_bw * count
+        dtoh += busy["dtoh"] * hw.dtoh_bw * count
+        if not critical:
+            critical = dag.critical_path()
+    tokens = plan.B * seq
+    t_model += hw.gemm_time(
+        plan.B * W.lm_head_flops(cfg), 0.0,
+        plan.B * cfg.vocab_size * W.BYTES, plan.B,
+    )
+    tp = tokens / t_model if t_model > 0 else 0.0
+    return PhaseEstimate(tp, t_model, tokens, htod, dtoh, layer_times, critical)

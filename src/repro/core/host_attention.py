@@ -1,0 +1,41 @@
+"""Host-side attention path (the paper's AVX CPU kernel, §4.2 + §B).
+
+On a TPU host this computation runs on the host CPU where the offloaded
+KV-cache lives, saving HtoD bandwidth for expert prefetch.  The paper's
+numerical-consistency scheme (§B) is reproduced exactly: BF16 operands are
+represented in FP32 with trailing mantissa bits zeroed, accumulation happens
+in FP32, and each dot-product result is rounded back to BF16.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def round_bf16(x: jax.Array) -> jax.Array:
+    """FP32 value with BF16 precision (round-to-nearest-even via cast)."""
+    return x.astype(jnp.bfloat16).astype(jnp.float32)
+
+
+def host_decode_attention(
+    q: jax.Array,        # (B, H, D)    bf16 or f32
+    k_cache: jax.Array,  # (B, S, K, D)
+    v_cache: jax.Array,  # (B, S, K, D)
+    pos,                 # scalar int: current position (attend to <= pos)
+) -> jax.Array:
+    """Decode-step GQA with the paper's BF16-consistent FP32 arithmetic."""
+    B, H, D = q.shape
+    K = k_cache.shape[2]
+    G = H // K
+    qf = round_bf16(q.astype(jnp.float32)).reshape(B, K, G, D)
+    kf = round_bf16(k_cache.astype(jnp.float32))
+    vf = round_bf16(v_cache.astype(jnp.float32))
+    scores = jnp.einsum("bkgd,bskd->bkgs", qf, kf) * (D ** -0.5)
+    scores = round_bf16(scores)                       # §B: round after dot
+    valid = jnp.arange(k_cache.shape[1]) <= pos
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", round_bf16(probs), vf)
+    return round_bf16(out).reshape(B, H, D)

@@ -1,0 +1,161 @@
+"""Batching-strategy search (paper §4.3–4.4, Eq. 1–3).
+
+Enumerates candidate configurations over the Table-2 variables
+(B, b_a, b_e, ω, S_Expert, S_Params), discards those violating the host
+(Eq. 2) and device (Eq. 3) memory constraints, estimates each survivor's
+runtime with the DAG critical-path model, and returns the throughput-
+maximizing plan.  Prefill and decode are searched separately
+(P-D disaggregation); following the paper, decode fixes B to the host-memory
+maximum.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterable, List, Optional, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.core import workload as W
+from repro.core.dag_builder import (
+    PhaseEstimate,
+    Plan,
+    estimate_decode,
+    estimate_prefill,
+)
+from repro.core.hardware import HardwareProfile
+
+
+# ---------------------------------------------------------------------------
+# Constraints
+# ---------------------------------------------------------------------------
+def host_batch_limit(cfg: ModelConfig, hw: HardwareProfile, ctx: int) -> int:
+    """Eq. 2: S_KV-CPU(B) + S_Model <= m_c."""
+    free = hw.host_mem_bytes - W.model_bytes(cfg)
+    if free <= 0:
+        return 0
+    per_seq = W.kv_bytes_per_seq(cfg, ctx)
+    if per_seq <= 0:
+        return 1 << 20                      # SSM: state is tiny
+    return max(0, int(free / per_seq))
+
+
+def device_memory_used(
+    cfg: ModelConfig, plan: Plan, ctx: int, phase: str
+) -> float:
+    """LHS of Eq. 3."""
+    s_dense = W.dense_module_bytes_per_layer(cfg)
+    kv_gpu = plan.b_a * min(ctx, cfg.sliding_window or ctx) * \
+        W.kv_bytes_per_token_layer(cfg) if cfg.has_attention else 0.0
+    if phase == "decode":
+        s_is = W.intermediate_bytes_decode(cfg, plan.b_a, ctx)
+    else:
+        s_is = W.intermediate_bytes_prefill(cfg, plan.b_a, ctx)
+    # accumulated hidden states for the expert stage + expert micro-batch
+    s_is += plan.B * (ctx if phase == "prefill" else 1) * 2 * cfg.d_model * W.BYTES
+    if cfg.has_moe:
+        s_is += plan.b_e * 2 * (cfg.moe_d_ff + cfg.d_model) * W.BYTES
+    return plan.s_params + plan.s_expert + s_dense + kv_gpu + s_is
+
+
+def device_memory_ok(
+    cfg: ModelConfig, hw: HardwareProfile, plan: Plan, ctx: int, phase: str
+) -> bool:
+    return device_memory_used(cfg, plan, ctx, phase) <= hw.device_mem_bytes
+
+
+# ---------------------------------------------------------------------------
+# Search
+# ---------------------------------------------------------------------------
+def _pow2_grid(lo: int, hi: int) -> List[int]:
+    out, v = [], lo
+    while v < hi:
+        out.append(v)
+        v *= 2
+    out.append(hi)
+    return sorted(set(out))
+
+
+@dataclass
+class SearchResult:
+    plan: Plan
+    estimate: PhaseEstimate
+    evaluated: int
+
+
+def search_decode(
+    cfg: ModelConfig,
+    hw: HardwareProfile,
+    ctx: int,
+    B: Optional[int] = None,
+    omega_grid: Optional[Iterable[float]] = None,
+    use_cpu_attention: bool = True,
+) -> SearchResult:
+    B_max = host_batch_limit(cfg, hw, ctx)
+    if B_max == 0:
+        raise ValueError(f"{cfg.name} does not fit in host memory")
+    B = min(B or B_max, B_max)
+    if omega_grid is None:
+        omega_grid = [i / 10 for i in range(11)] if use_cpu_attention else [0.0]
+    # DeepSeek-style latent/up-projected KV makes host attention unprofitable
+    # (paper §5.3 sets w=0 for DeepSeek); attention-free archs have no split.
+    if not cfg.has_attention:
+        omega_grid = [0.0]
+
+    best: Optional[Tuple[float, Plan, PhaseEstimate]] = None
+    n_eval = 0
+    e_buf = W.expert_weight_bytes(cfg) if cfg.has_moe else 0.0
+    spare_candidates = [0.0]
+    for b_a in _pow2_grid(32, max(32, B)):
+        for b_e in _pow2_grid(512, 16384):
+            for omega in omega_grid:
+                for s_expert in ({e_buf, 2 * e_buf} if e_buf else {0.0}):
+                    for s_params in spare_candidates:
+                        plan = Plan(
+                            B=B, b_a=b_a, b_e=b_e, omega=omega,
+                            s_expert=s_expert, s_params=s_params,
+                            phase="decode",
+                        )
+                        if not device_memory_ok(cfg, hw, plan, ctx, "decode"):
+                            continue
+                        # spare device memory can cache parameters
+                        spare = hw.device_mem_bytes - device_memory_used(
+                            cfg, plan, ctx, "decode"
+                        )
+                        if s_params == 0.0 and spare > 1e9:
+                            plan = Plan(
+                                B=B, b_a=b_a, b_e=b_e, omega=omega,
+                                s_expert=s_expert, s_params=spare * 0.9,
+                                phase="decode",
+                            )
+                        est = estimate_decode(cfg, hw, plan, ctx)
+                        n_eval += 1
+                        if best is None or est.throughput > best[0]:
+                            best = (est.throughput, plan, est)
+    assert best is not None, "no feasible decode plan"
+    return SearchResult(best[1], best[2], n_eval)
+
+
+def search_prefill(
+    cfg: ModelConfig,
+    hw: HardwareProfile,
+    seq: int,
+    B: Optional[int] = None,
+) -> SearchResult:
+    B_max = host_batch_limit(cfg, hw, seq)
+    B = min(B or B_max, B_max)
+    best: Optional[Tuple[float, Plan, PhaseEstimate]] = None
+    n_eval = 0
+    e_buf = W.expert_weight_bytes(cfg) if cfg.has_moe else 0.0
+    for B_try in _pow2_grid(8, max(8, B)):
+        for b_a in _pow2_grid(1, B_try):
+            plan = Plan(
+                B=B_try, b_a=b_a, b_e=max(65536, B_try * seq),
+                omega=0.0, s_expert=e_buf, s_params=0.0, phase="prefill",
+            )
+            if not device_memory_ok(cfg, hw, plan, seq, "prefill"):
+                continue
+            est = estimate_prefill(cfg, hw, plan, seq)
+            n_eval += 1
+            if best is None or est.throughput > best[0]:
+                best = (est.throughput, plan, est)
+    assert best is not None, f"no feasible prefill plan for {cfg.name}"
+    return SearchResult(best[1], best[2], n_eval)

@@ -1,0 +1,177 @@
+"""Analytic per-module workload model (FLOPs / bytes / memory).
+
+These are the "profiled" quantities of the paper's scheduler (§B: modules
+are profiled offline across batch sizes).  With no physical GPU in this
+container, profiling is replaced by closed-form counts derived from the
+architecture — the same quantities the paper's profiler measures.
+
+All byte figures assume the config dtype (bf16 = 2 bytes).  ``ctx`` is the
+context length visible to attention at decode time.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs.base import ModelConfig
+
+BYTES = 2  # bf16
+
+
+def dtype_bytes(cfg: ModelConfig) -> int:
+    return 2 if "16" in cfg.dtype else 4
+
+
+# ---------------------------------------------------------------------------
+# Per-layer weight sizes
+# ---------------------------------------------------------------------------
+def attn_weight_bytes(cfg: ModelConfig) -> float:
+    q = cfg.num_heads * cfg.head_dim
+    kv = cfg.num_kv_heads * cfg.head_dim
+    return (cfg.d_model * q + 2 * cfg.d_model * kv + q * cfg.d_model) * BYTES
+
+
+def expert_weight_bytes(cfg: ModelConfig) -> float:
+    """One expert's weights."""
+    return 3 * cfg.d_model * cfg.moe_d_ff * BYTES
+
+
+def dense_ffn_weight_bytes(cfg: ModelConfig) -> float:
+    return 3 * cfg.d_model * cfg.d_ff * BYTES
+
+
+def ssm_weight_bytes(cfg: ModelConfig) -> float:
+    d, di, ns, nh = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_nheads
+    return (d * (2 * di + 2 * ns + nh) + di * d) * BYTES
+
+
+def model_bytes(cfg: ModelConfig) -> float:
+    return cfg.param_counts()["total"] * BYTES
+
+
+def kv_bytes_per_token_layer(cfg: ModelConfig) -> float:
+    """KV-cache bytes appended per token for one attention layer."""
+    return 2 * cfg.num_kv_heads * cfg.head_dim * BYTES
+
+
+def kv_bytes_per_seq(cfg: ModelConfig, ctx: int) -> float:
+    """Full KV cache of one sequence across all attention layers."""
+    total = 0.0
+    for i in range(cfg.num_layers):
+        if cfg.layer_kind(i) == "attn":
+            span = min(ctx, cfg.sliding_window) if cfg.sliding_window else ctx
+            total += span * kv_bytes_per_token_layer(cfg)
+    # SSM layers carry an O(1) state instead
+    for i in range(cfg.num_layers):
+        if cfg.layer_kind(i) == "ssm":
+            total += (
+                cfg.ssm_nheads * cfg.ssm_state * cfg.ssm_headdim * 4
+                + cfg.ssm_conv_width * (cfg.ssm_d_inner + 2 * cfg.ssm_state) * BYTES
+            )
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Per-module FLOPs (per token unless stated)
+# ---------------------------------------------------------------------------
+def pre_attn_flops(cfg: ModelConfig) -> float:
+    q = cfg.num_heads * cfg.head_dim
+    kv = cfg.num_kv_heads * cfg.head_dim
+    return 2 * cfg.d_model * (q + 2 * kv)
+
+
+def post_attn_flops(cfg: ModelConfig) -> float:
+    return 2 * cfg.num_heads * cfg.head_dim * cfg.d_model
+
+
+def attn_mech_flops_decode(cfg: ModelConfig, ctx: int) -> float:
+    """QK^T + PV for ONE new token against `ctx` cached tokens."""
+    span = min(ctx, cfg.sliding_window) if cfg.sliding_window else ctx
+    return 4 * cfg.num_heads * cfg.head_dim * span
+
+
+def attn_mech_flops_prefill(cfg: ModelConfig, seq: int) -> float:
+    """Per sequence (causal: ~S^2/2 each for QK^T and PV)."""
+    span = min(seq, cfg.sliding_window) if cfg.sliding_window else seq
+    return 4 * cfg.num_heads * cfg.head_dim * seq * span / 2
+
+def expert_flops_per_token(cfg: ModelConfig) -> float:
+    """FLOPs for one token in ONE expert (3 GEMMs, gated FFN)."""
+    return 6 * cfg.d_model * cfg.moe_d_ff
+
+
+def dense_ffn_flops(cfg: ModelConfig) -> float:
+    return 6 * cfg.d_model * cfg.d_ff
+
+
+def router_flops(cfg: ModelConfig) -> float:
+    return 2 * cfg.d_model * cfg.num_experts
+
+
+def ssm_flops_per_token(cfg: ModelConfig) -> float:
+    d, di, ns, nh = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_nheads
+    proj = 2 * d * (2 * di + 2 * ns + nh) + 2 * di * d
+    scan = 6 * di * ns          # state update + readout
+    return proj + scan
+
+
+def lm_head_flops(cfg: ModelConfig) -> float:
+    return 2 * cfg.d_model * cfg.vocab_size
+
+
+# ---------------------------------------------------------------------------
+# Layer census
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class LayerCensus:
+    n_attn: int
+    n_ssm: int
+    n_moe: int
+    n_dense_ffn: int
+
+
+def census(cfg: ModelConfig) -> LayerCensus:
+    n_attn = sum(1 for i in range(cfg.num_layers) if cfg.layer_kind(i) == "attn")
+    n_ssm = cfg.num_layers - n_attn
+    n_moe = sum(1 for i in range(cfg.num_layers) if cfg.ffn_kind(i) == "moe")
+    n_dense = sum(
+        1
+        for i in range(cfg.num_layers)
+        if cfg.ffn_kind(i) == "dense" and cfg.d_ff > 0
+    )
+    return LayerCensus(n_attn, n_ssm, n_moe, n_dense)
+
+
+def dense_module_bytes_per_layer(cfg: ModelConfig) -> float:
+    """Weights of the per-layer *dense* modules (attention / SSM / shared) —
+    sizes the paper's single dense-module prefetch buffer (S_Dense)."""
+    per = 0.0
+    c = census(cfg)
+    if c.n_attn:
+        per = max(per, attn_weight_bytes(cfg))
+    if c.n_ssm:
+        per = max(per, ssm_weight_bytes(cfg))
+    if c.n_dense_ffn:
+        per = max(per, dense_ffn_weight_bytes(cfg))
+    return per
+
+
+# ---------------------------------------------------------------------------
+# Intermediate-state sizing (constrains b_a in Eq. 3)
+# ---------------------------------------------------------------------------
+def intermediate_bytes_decode(cfg: ModelConfig, b_a: int, ctx: int) -> float:
+    """Peak activation bytes for an attention micro-batch at decode."""
+    h = cfg.num_heads
+    hd = cfg.head_dim
+    qkv = 3 * h * hd * BYTES
+    scores = h * min(ctx, cfg.sliding_window or ctx) * 4      # f32 row
+    hidden = 2 * cfg.d_model * BYTES
+    return b_a * (qkv + scores + hidden)
+
+
+def intermediate_bytes_prefill(cfg: ModelConfig, b_a: int, seq: int) -> float:
+    """Peak activation bytes for a prefill micro-batch (flash-blocked)."""
+    h, hd = cfg.num_heads, cfg.head_dim
+    block = 512
+    per_tok = (3 * h * hd + 4 * cfg.d_model) * BYTES
+    flash = h * block * 4
+    return b_a * seq * (per_tok + flash)

@@ -1,0 +1,10 @@
+from repro.data.datasets import DATASETS, DatasetSpec, synthetic_batches, synthetic_requests
+from repro.data.tokenizer import ByteTokenizer
+
+__all__ = [
+    "DATASETS",
+    "DatasetSpec",
+    "synthetic_batches",
+    "synthetic_requests",
+    "ByteTokenizer",
+]

@@ -1,0 +1,100 @@
+"""Pallas TPU flash-decode kernel (GQA, one new token vs. a long KV cache).
+
+The decode attention module is the second hot module of MoE-Gen's batching
+(the paper batches it at ``b_a``).  Grid (B, K, S/blk): for each (sequence,
+kv-head) the kernel streams KV blocks HBM->VMEM with an online-softmax
+accumulator, masking cache slots beyond the current position (scalar-
+prefetched).  The grouped query heads (G = H/K) ride in the sublane dim.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_attn_kernel(
+    pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+    block_s: int, n_s: int, scale: float,
+):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # (G, hd)
+    ks = k_ref[0, :, 0, :].astype(jnp.float32)           # (bs, hd)
+    vs = v_ref[0, :, 0, :].astype(jnp.float32)
+    scores = jax.lax.dot_general(
+        q, ks, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale                                            # (G, bs)
+    idx = s * block_s + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    scores = jnp.where(idx <= pos_ref[0], scores, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, scores.max(axis=1, keepdims=True))
+    p = jnp.exp(scores - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, vs, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(s == n_s - 1)
+    def _store():
+        o_ref[0, 0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+def decode_attention(
+    q: jax.Array,        # (B, H, hd)
+    k: jax.Array,        # (B, S, K, hd)
+    v: jax.Array,        # (B, S, K, hd)
+    pos: jax.Array,      # scalar int32: attend to slots <= pos
+    *,
+    block_s: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    B, H, hd = q.shape
+    _, S, K, _ = k.shape
+    G = H // K
+    assert S % block_s == 0, (S, block_s)
+    n_s = S // block_s
+    qg = q.reshape(B, K, G, hd)
+    grid = (B, K, n_s)
+    out = pl.pallas_call(
+        functools.partial(
+            _decode_attn_kernel, block_s=block_s, n_s=n_s,
+            scale=hd ** -0.5,
+        ),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, G, hd), lambda b, h, s, pos: (b, h, 0, 0)),
+                pl.BlockSpec((1, block_s, 1, hd), lambda b, h, s, pos: (b, s, h, 0)),
+                pl.BlockSpec((1, block_s, 1, hd), lambda b, h, s, pos: (b, s, h, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, s, pos: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, K, G, hd), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(pos, jnp.int32).reshape(1), qg, k, v)
+    return out.reshape(B, H, hd)

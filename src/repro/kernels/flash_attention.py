@@ -1,0 +1,102 @@
+"""Pallas TPU causal flash-attention (prefill/train path) with block skipping.
+
+Unlike the XLA fallback (models.attention.blocked_attention), which computes
+and masks every (q-block, kv-block) pair (~2x the causal FLOPs), this kernel
+skips fully-masked blocks with ``pl.when`` — the proper TPU fix for the
+compute-term overcount called out in EXPERIMENTS.md §Roofline.
+
+Layout: MHA-shaped (GQA callers repeat KV heads in ops.py).  Grid
+(B, H, nq, nk), kv innermost; online softmax in VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  block_q: int, block_k: int, n_k: int, scale: float):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal block skipping: kv block strictly above the diagonal => no work
+    @pl.when(j * block_k <= i * block_q + block_q - 1)
+    def _compute():
+        q = q_ref[0, 0, 0].astype(jnp.float32)           # (bq, hd)
+        ks = k_ref[0, :, 0, :].astype(jnp.float32)       # (bk, hd)
+        vs = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, ks, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                        # (bq, bk)
+        qpos = i * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, vs, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    @pl.when(j == n_k - 1)
+    def _store():
+        o_ref[0, 0, 0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,        # (B, S, H, hd)
+    k: jax.Array,        # (B, S, H, hd)   (KV heads pre-repeated for GQA)
+    v: jax.Array,
+    *,
+    block_q: int = 256,
+    block_k: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    B, S, H, hd = q.shape
+    assert k.shape == q.shape and v.shape == q.shape
+    assert S % block_q == 0 and S % block_k == 0
+    nq, nk = S // block_q, S // block_k
+    qt = q.transpose(0, 2, 1, 3).reshape(B, H, nq, block_q, hd)
+    grid = (B, H, nq, nk)
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, block_q=block_q, block_k=block_k, n_k=nk,
+            scale=hd ** -0.5,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, block_q, hd), lambda b, h, i, j: (b, h, i, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, hd), lambda b, h, i, j: (b, j, h, 0)),
+            pl.BlockSpec((1, block_k, 1, hd), lambda b, h, i, j: (b, j, h, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, 1, block_q, hd), lambda b, h, i, j: (b, h, i, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, nq, block_q, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, k, v)
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,94 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handle padding to tile multiples, GQA head repetition, and backend
+selection: ``interpret=True`` (Python interpretation, bit-exact oracle
+semantics) everywhere except real TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import expert_gemm as _eg
+from repro.kernels import decode_attention as _da
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ssd_scan as _ssd
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def grouped_matmul(x, w, interpret=None):
+    """(E, C, D) @ (E, D, F) with automatic tile padding."""
+    interpret = default_interpret() if interpret is None else interpret
+    E, C, D = x.shape
+    F = w.shape[-1]
+    bc = min(128, C) if C % 128 else 128
+    xp = _pad_to(x, 1, 128)
+    xp = _pad_to(xp, 2, 256)
+    wp = _pad_to(_pad_to(w, 1, 256), 2, 128)
+    y = _eg.grouped_matmul(xp, wp, interpret=interpret)
+    return y[:, :C, :F]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def expert_ffn(x, wg, wu, wd, interpret=None):
+    """Fused gated expert FFN with tile padding."""
+    interpret = default_interpret() if interpret is None else interpret
+    E, C, D = x.shape
+    xp = _pad_to(x, 1, 128)
+    wgp = _pad_to(wg, 2, 128)
+    wup = _pad_to(wu, 2, 128)
+    wdp = _pad_to(wd, 1, 128)
+    y = _eg.expert_ffn(xp, wgp, wup, wdp, interpret=interpret)
+    return y[:, :C, :]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_attention(q, k, v, pos, interpret=None):
+    """(B,H,hd) x (B,S,K,hd) -> (B,H,hd), masked to slots <= pos."""
+    interpret = default_interpret() if interpret is None else interpret
+    S = k.shape[1]
+    block_s = 256 if S % 256 == 0 else S
+    return _da.decode_attention(
+        q, k, v, pos, block_s=block_s, interpret=interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "interpret"))
+def flash_attention(q, k, v, causal=True, interpret=None):
+    """(B,S,H,hd) GQA causal attention (KV heads repeated as needed)."""
+    interpret = default_interpret() if interpret is None else interpret
+    H, K = q.shape[2], k.shape[2]
+    if K != H:
+        rep = H // K
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    S = q.shape[1]
+    block = 256 if S % 256 == 0 else S
+    return _fa.flash_attention(
+        q, k, v, block_q=block, block_k=block, interpret=interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, B_in, C_in, dt, A, chunk, interpret=None):
+    """Chunked SSD scan; returns (y, final_state)."""
+    interpret = default_interpret() if interpret is None else interpret
+    return _ssd.ssd_scan_pallas(
+        x, B_in, C_in, dt, A, chunk, interpret=interpret
+    )

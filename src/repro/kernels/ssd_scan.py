@@ -1,0 +1,106 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan.
+
+Grid (B, nh/bh, n_chunks) with the chunk dim innermost and sequential: the
+recurrent state H (bh, ns, hp) lives in a VMEM scratch that persists across
+chunk steps — the TPU-native form of the inter-chunk recurrence, while the
+intra-chunk quadratic work feeds the MXU.  Oracle: models.ssm._chunk_math
+via kernels/ref.ssd_chunk_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, b_ref, c_ref, dt_ref, da_ref, y_ref, hout_ref, h_ref,
+                *, n_chunks: int):
+    c_idx = pl.program_id(2)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)          # (Q, bh, hp)
+    Bc = b_ref[0, 0].astype(jnp.float32)         # (Q, ns)
+    Cc = c_ref[0, 0].astype(jnp.float32)         # (Q, ns)
+    dt = dt_ref[0, 0].astype(jnp.float32)        # (Q, bh)
+    dA = da_ref[0, 0].astype(jnp.float32)        # (Q, bh)
+    Q = x.shape[0]
+
+    cum = jnp.cumsum(dA, axis=0)                 # (Q, bh)
+    diff = cum[:, None, :] - cum[None, :, :]     # (i, j, bh)
+    causal = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    # mask before exp (above-diagonal diffs overflow) — matches the oracle
+    L = jnp.exp(jnp.where(causal[:, :, None], diff, -1e30))
+    CB = jax.lax.dot_general(
+        Cc, Bc, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                            # (i, j)
+    M = CB[:, :, None] * L * dt[None, :, :]      # (i, j, bh)
+    y_intra = jnp.einsum("ijn,jnp->inp", M, x)
+    H = h_ref[...]                               # (bh, ns, hp)
+    y_inter = jnp.einsum("is,nsp->inp", Cc, H) * jnp.exp(cum)[..., None]
+    w = jnp.exp(cum[-1:, :] - cum) * dt          # (Q, bh)
+    S_c = jnp.einsum("jn,js,jnp->nsp", w, Bc, x)
+    h_ref[...] = H * jnp.exp(cum[-1])[:, None, None] + S_c
+    y_ref[0, 0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    @pl.when(c_idx == n_chunks - 1)
+    def _store_state():
+        hout_ref[0] = h_ref[...]
+
+
+def ssd_scan_pallas(
+    x: jax.Array,       # (B, S, nh, hp)
+    B_in: jax.Array,    # (B, S, ns)
+    C_in: jax.Array,    # (B, S, ns)
+    dt: jax.Array,      # (B, S, nh) f32
+    A: jax.Array,       # (nh,) f32 negative
+    chunk: int,
+    *,
+    block_h: int = 0,
+    interpret: bool = True,
+):
+    """Returns (y (B,S,nh,hp), final_state (B,nh,ns,hp) f32)."""
+    Bt, S, nh, hp = x.shape
+    ns = B_in.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+    bh = block_h or nh
+    assert nh % bh == 0
+    dA = dt * A
+
+    xr = x.reshape(Bt, nc, Q, nh, hp)
+    br = B_in.reshape(Bt, nc, Q, ns)
+    cr = C_in.reshape(Bt, nc, Q, ns)
+    dtr = dt.reshape(Bt, nc, Q, nh)
+    dar = dA.reshape(Bt, nc, Q, nh)
+
+    grid = (Bt, nh // bh, nc)
+    y, hout = pl.pallas_call(
+        functools.partial(_ssd_kernel, n_chunks=nc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, bh, hp), lambda b, h, c: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, Q, ns), lambda b, h, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, ns), lambda b, h, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, bh), lambda b, h, c: (b, c, 0, h)),
+            pl.BlockSpec((1, 1, Q, bh), lambda b, h, c: (b, c, 0, h)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, bh, hp), lambda b, h, c: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, bh, ns, hp), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bt, nc, Q, nh, hp), x.dtype),
+            jax.ShapeDtypeStruct((Bt, nh, ns, hp), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bh, ns, hp), jnp.float32)],
+        interpret=interpret,
+    )(xr, br, cr, dtr, dar)
+    return y.reshape(Bt, S, nh, hp), hout

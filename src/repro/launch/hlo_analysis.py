@@ -1,0 +1,234 @@
+"""Parse lowered/compiled HLO for the roofline's collective term.
+
+``compiled.cost_analysis()`` gives FLOPs and bytes accessed, but not
+per-collective traffic — we sum operand sizes of every collective op in the
+post-SPMD optimized HLO text.  Collectives inside ``while`` bodies (layer
+scans) are multiplied by the loop trip count, recovered from the loop
+condition's comparison constant (best effort, falling back to a caller
+default).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\("
+)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\{\s*$")
+_WHILE_RE = re.compile(
+    r"=\s*\S+\s+while\(.*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)"
+)
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo_text: str) -> Dict[str, list]:
+    comps: Dict[str, list] = {}
+    cur: Optional[str] = None
+    for line in hlo_text.splitlines():
+        m = _COMP_RE.match(line)
+        if m:
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+_CALLS_RE = re.compile(r"(?:body|calls)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+
+
+def collective_stats(
+    hlo_text: str, default_trips: int = 1
+) -> Dict[str, Dict[str, float]]:
+    """Per-collective-kind {count, bytes}.
+
+    Collectives are attributed along the call graph from ENTRY; each
+    ``while`` multiplies its body's contribution by the loop trip count
+    (read from the condition's comparison constant), so nested scans
+    (e.g. the KV-block scan inside the layer scan) compose multiplicatively.
+    """
+    comps = _split_computations(hlo_text)
+    entry = None
+    for line in hlo_text.splitlines():
+        m = re.match(r"^ENTRY\s+%?([\w.\-]+)", line)
+        if m:
+            entry = m.group(1)
+    if entry is None and comps:
+        entry = next(iter(comps))
+
+    def loop_trips(cond: str) -> int:
+        best = default_trips
+        for cl in comps.get(cond, []):
+            c = _CONST_RE.search(cl)
+            if c and int(c.group(1)) > 0:
+                best = int(c.group(1))
+        return best
+
+    stats: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"count": 0.0, "bytes": 0.0}
+    )
+
+    def walk(name: str, mult: float, depth: int = 0) -> None:
+        if depth > 12 or name not in comps:
+            return
+        for line in comps[name]:
+            m = _COLL_RE.match(line)
+            if m and m.group(3) != "-done":
+                b = _shape_bytes(m.group(1))
+                stats[m.group(2)]["count"] += mult
+                stats[m.group(2)]["bytes"] += b * mult
+            if " while(" in line:
+                mc = _COND_RE.search(line)
+                mb = re.search(r"body=%?([\w.\-]+)", line)
+                if mb:
+                    t = loop_trips(mc.group(1)) if mc else default_trips
+                    walk(mb.group(1), mult * t, depth + 1)
+            else:
+                for callee in _CALLS_RE.findall(line):
+                    walk(callee, mult, depth + 1)
+
+    walk(entry, 1.0)
+    return dict(stats)
+
+
+def total_collective_bytes(hlo_text: str, default_trips: int = 1) -> float:
+    s = collective_stats(hlo_text, default_trips)
+    total = 0.0
+    for kind, d in s.items():
+        mult = 2.0 if kind == "all-reduce" else 1.0   # ring: RS + AG phases
+        total += mult * d["bytes"]
+    return total
+
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\S+?)\s+[a-z\-]+")
+_DOT_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\S+?)\s+dot\("
+    r"\s*%?([\w.\-]+),\s*%?([\w.\-]+)\)"
+)
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _shape_dims(shape_str: str):
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",") if d] if dims else []
+
+
+def dot_flops(hlo_text: str, default_trips: int = 1) -> float:
+    """Total dot-product FLOPs along the call graph, while bodies scaled by
+    trip count.  flops(dot) = 2 * prod(output dims) * prod(contracted dims).
+    """
+    comps = _split_computations(hlo_text)
+    entry = None
+    for line in hlo_text.splitlines():
+        m = re.match(r"^ENTRY\s+%?([\w.\-]+)", line)
+        if m:
+            entry = m.group(1)
+    if entry is None and comps:
+        entry = next(iter(comps))
+
+    # symbol tables: per computation, name -> shape string
+    symtab: Dict[str, Dict[str, str]] = {}
+    for name, lines in comps.items():
+        tab: Dict[str, str] = {}
+        for line in lines:
+            d = _DEF_RE.match(line)
+            if d:
+                tab[d.group(1)] = d.group(2)
+        symtab[name] = tab
+
+    def loop_trips(cond: str) -> int:
+        best = default_trips
+        for cl in comps.get(cond, []):
+            c = _CONST_RE.search(cl)
+            if c and int(c.group(1)) > 0:
+                best = int(c.group(1))
+        return best
+
+    total = 0.0
+    seen_guard = [0]
+
+    def walk(name: str, mult: float, depth: int = 0) -> None:
+        nonlocal total
+        seen_guard[0] += 1
+        if depth > 12 or name not in comps or seen_guard[0] > 200000:
+            return
+        tab = symtab.get(name, {})
+        for line in comps[name]:
+            dm = _DOT_RE.match(line)
+            if dm:
+                out_dims = _shape_dims(dm.group(2)) or []
+                lhs_shape = tab.get(dm.group(3))
+                cdims = _CDIMS_RE.search(line)
+                contracted = 1
+                if lhs_shape and cdims:
+                    ldims = _shape_dims(lhs_shape) or []
+                    for ci in (int(c) for c in cdims.group(1).split(",") if c):
+                        if ci < len(ldims):
+                            contracted *= ldims[ci]
+                n = 1
+                for d in out_dims:
+                    n *= d
+                total += 2.0 * n * contracted * mult
+            if " while(" in line:
+                mc = _COND_RE.search(line)
+                mb = re.search(r"body=%?([\w.\-]+)", line)
+                if mb:
+                    t = loop_trips(mc.group(1)) if mc else default_trips
+                    walk(mb.group(1), mult * t, depth + 1)
+            else:
+                for callee in _CALLS_RE.findall(line):
+                    walk(callee, mult, depth + 1)
+
+    walk(entry, 1.0)
+    return total
+
+
+def op_histogram(hlo_text: str, top: int = 20) -> Dict[str, int]:
+    """Instruction-name histogram (diagnosing remat / redundant ops)."""
+    counts: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = re.match(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*\S+\s+([a-z\-]+)\(", line)
+        if m:
+            counts[m.group(1)] += 1
+    return dict(sorted(counts.items(), key=lambda kv: -kv[1])[:top])

@@ -1,0 +1,36 @@
+"""Production meshes.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis is pure
+data parallelism over DCN.
+
+Defined as functions so importing this module never touches jax device
+state (device count locks on first backend init).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+from repro.sharding.specs import ShardCtx
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_ctx(mesh, *, seq_shard: bool = False) -> ShardCtx:
+    names = mesh.axis_names
+    batch = tuple(n for n in names if n in ("pod", "data"))
+    model = "model" if "model" in names else None
+    return ShardCtx(
+        mesh=mesh, batch_axes=batch, model_axis=model, seq_shard=seq_shard
+    )
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many local devices exist (tests)."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,57 @@
+"""Serving launcher: plan with the paper's search, then run the engine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
+        --requests 16 --prompt-len 32 --decode-len 16
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.core import planner
+from repro.core.dag_builder import Plan
+from repro.core.hardware import PROFILES
+from repro.data.datasets import DatasetSpec, synthetic_requests
+from repro.models import model as M
+from repro.serving.scheduler import serve_dataset
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--profile", default="C2-A5000-512GB", choices=PROFILES)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--decode-len", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=8,
+                    help="accumulated batch B for the smoke execution")
+    args = ap.parse_args()
+
+    hw = PROFILES[args.profile]
+
+    # 1. plan on the FULL config with the paper's search
+    full = get_config(args.arch)
+    res = planner.search_decode(full, hw, ctx=args.prompt_len + args.decode_len)
+    print(f"planned ({full.name} on {hw.name}): {res.plan.describe()}")
+    print(f"predicted decode throughput: {res.estimate.throughput:.0f} tok/s")
+
+    # 2. execute module-based batching at smoke scale with the same shape
+    cfg = get_config(args.arch, smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    spec = DatasetSpec("serve", args.requests, args.prompt_len, args.decode_len)
+    requests = synthetic_requests(spec, cfg.vocab_size)
+    plan = Plan(
+        B=args.batch,
+        b_a=max(1, min(res.plan.b_a, args.batch)),
+        b_e=min(res.plan.b_e, 128),
+        omega=res.plan.omega if cfg.has_attention else 0.0,
+    )
+    report = serve_dataset(cfg, params, requests, plan, args.decode_len)
+    print(f"served {args.requests} requests in {report.total_s:.2f}s "
+          f"({report.decode_throughput:.1f} decode tok/s on this host)")
+
+
+if __name__ == "__main__":
+    main()

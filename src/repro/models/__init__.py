@@ -1,0 +1,9 @@
+from repro.models.model import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    prefill,
+)
+
+__all__ = ["init_params", "forward", "prefill", "decode_step", "init_cache"]

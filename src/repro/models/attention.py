@@ -1,0 +1,309 @@
+"""Attention: GQA with RoPE; full-sequence (train/prefill) and decode paths.
+
+Three implementations:
+
+* ``naive_attention``     — materialized scores, used for tiny smoke shapes
+                             and as the oracle for the blocked versions.
+* ``blocked_attention``   — flash-style online-softmax over KV blocks,
+                             memory-bounded; causal mask applied per block.
+* ``swa_attention``       — sliding-window attention that only *computes*
+                             the window (sub-quadratic): scans q blocks and
+                             slices a static-size KV window per block.
+
+Decode uses a pre-allocated KV cache (full attention) or a circular window
+buffer (SWA).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, dense_init
+from repro.sharding.specs import ShardCtx
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+def init_attn_params(cfg: ModelConfig, key) -> Dict[str, jax.Array]:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h * hd), dtype=dt),
+        "wk": dense_init(ks[1], (d, kv * hd), dtype=dt),
+        "wv": dense_init(ks[2], (d, kv * hd), dtype=dt),
+        "wo": dense_init(ks[3], (h * hd, d), in_dim=h * hd, dtype=dt),
+    }
+    if cfg.qkv_bias:
+        p["wq_bias"] = jnp.zeros((h * hd,), dt)
+        p["wk_bias"] = jnp.zeros((kv * hd,), dt)
+        p["wv_bias"] = jnp.zeros((kv * hd,), dt)
+    return p
+
+
+def _project_qkv(cfg: ModelConfig, p, x: jax.Array):
+    B, S, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["wq_bias"]
+        k = k + p["wk_bias"]
+        v = v + p["wv_bias"]
+    q = q.reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Core attention math (all take (B, S, H, D) / (B, T, K, D))
+# ---------------------------------------------------------------------------
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q: (B, Sq, K, G, D), k: (B, Sk, K, D) -> (B, K, G, Sq, Sk) in f32."""
+    return jnp.einsum(
+        "bqkgd,bskd->bkgqs", q, k, preferred_element_type=jnp.float32
+    )
+
+
+def naive_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Reference attention.  q: (B, Sq, H, D); k, v: (B, Sk, K, D)."""
+    B, Sq, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    scale = D ** -0.5
+    qg = q.reshape(B, Sq, K, G, D)
+    scores = _gqa_scores(qg, k) * scale                     # (B,K,G,Sq,Sk)
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(k.shape[1])
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, D)
+
+
+def blocked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_block: int = 512,
+    kv_block: int = 512,
+) -> jax.Array:
+    """Flash-style attention: online softmax over KV blocks.
+
+    Memory is O(S * kv_block) instead of O(S^2).  All KV blocks are computed
+    and masked (the Pallas kernel skips fully-masked blocks on TPU; see
+    kernels/flash_attention).
+    """
+    B, S, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    if S % q_block or S % kv_block:
+        return naive_attention(q, k, v, causal=causal, window=window)
+    scale = D ** -0.5
+    nq, nk = S // q_block, S // kv_block
+    qb = q.reshape(B, nq, q_block, K, G, D)
+
+    def body(carry, i):
+        m, l, acc = carry
+        ks = lax.dynamic_slice_in_dim(k, i * kv_block, kv_block, axis=1)
+        vs = lax.dynamic_slice_in_dim(v, i * kv_block, kv_block, axis=1)
+        s = (
+            jnp.einsum("bnqkgd,bjkd->bnkgqj", qb, ks,
+                       preferred_element_type=jnp.float32)
+            * scale
+        )                                                   # (B,nq,K,G,qb,kb)
+        qpos = (
+            jnp.arange(nq)[:, None] * q_block + jnp.arange(q_block)[None, :]
+        )                                                   # (nq, qb)
+        kpos = i * kv_block + jnp.arange(kv_block)          # (kb,)
+        mask = jnp.ones((nq, q_block, kv_block), bool)
+        if causal:
+            mask &= qpos[..., None] >= kpos[None, None, :]
+        if window:
+            mask &= qpos[..., None] - kpos[None, None, :] < window
+        s = jnp.where(mask[:, None, None, :, :][None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bnkgqj,bjkd->bnkgqd", p.astype(vs.dtype), vs)
+        acc_new = acc * corr[..., None].astype(acc.dtype) + pv.astype(acc.dtype)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, nq, K, G, q_block), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, nq, K, G, q_block), jnp.float32)
+    a0 = jnp.zeros((B, nq, K, G, q_block, D), jnp.float32)
+    (m, l, acc), _ = lax.scan(body, (m0, l0, a0), jnp.arange(nk))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.astype(q.dtype).transpose(0, 1, 4, 2, 3, 5)   # (B,nq,qb,K,G,D)
+    return out.reshape(B, S, H, D)
+
+
+def swa_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    window: int,
+    q_block: int = 512,
+) -> jax.Array:
+    """Sliding-window attention computing only the window (sub-quadratic).
+
+    Scans query blocks; each block attends to a static slice of
+    ``window + q_block`` keys ending at the block's last position.
+    """
+    B, S, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    if S <= window + q_block or S % q_block:
+        return naive_attention(q, k, v, causal=True, window=window)
+    scale = D ** -0.5
+    nq = S // q_block
+    span = window + q_block
+    # pad keys/values on the left so every slice is in-bounds
+    kp = jnp.pad(k, ((0, 0), (window, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (window, 0), (0, 0), (0, 0)))
+
+    def body(_, i):
+        qs = lax.dynamic_slice_in_dim(q, i * q_block, q_block, axis=1)
+        qs = qs.reshape(B, q_block, K, G, D)
+        # in padded coords, query block [i*qb, i*qb+qb) sees keys
+        # [i*qb, i*qb + span)  (= original [i*qb - window, i*qb + qb))
+        ks = lax.dynamic_slice_in_dim(kp, i * q_block, span, axis=1)
+        vs = lax.dynamic_slice_in_dim(vp, i * q_block, span, axis=1)
+        s = _gqa_scores(qs, ks) * scale                     # (B,K,G,qb,span)
+        qpos = i * q_block + jnp.arange(q_block)
+        kpos = i * q_block + jnp.arange(span) - window      # original coords
+        mask = (qpos[:, None] >= kpos[None, :]) & (
+            qpos[:, None] - kpos[None, :] < window
+        ) & (kpos[None, :] >= 0)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(vs.dtype), vs)
+        return None, o.reshape(B, q_block, H, D)
+
+    _, outs = lax.scan(body, None, jnp.arange(nq))          # (nq,B,qb,H,D)
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, D)
+
+
+def full_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, window: int = 0
+) -> jax.Array:
+    """Dispatcher used by the model for full-sequence passes."""
+    S = q.shape[1]
+    if window and S > window:
+        return swa_attention(q, k, v, window=window)
+    if S <= 1024:
+        return naive_attention(q, k, v, causal=True, window=window)
+    return blocked_attention(q, k, v, causal=True, window=window)
+
+
+# ---------------------------------------------------------------------------
+# Module-level forward passes
+# ---------------------------------------------------------------------------
+def attn_forward(
+    cfg: ModelConfig,
+    p: Dict[str, jax.Array],
+    x: jax.Array,
+    ctx: ShardCtx = ShardCtx(),
+    positions: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Full-sequence attention.  Returns (output, kv) so prefill can cache.
+
+    Sharding: heads over the model axis when the head count divides it;
+    otherwise *context parallelism* — queries shard over sequence, KV
+    replicate — which keeps the S^2 work partitioned instead of silently
+    replicating it (found via the dry-run roofline: 20/24/12-head archs on a
+    16-way axis were 16x redundant).
+    """
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(cfg, p, x)
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    # rope BEFORE the sharding constraints: its f32 intermediates otherwise
+    # get collected in f32 (2x collective bytes, seen in the dry-run HLO)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    msize = ctx.model_size
+    heads_ok = msize <= 1 or cfg.num_heads % msize == 0
+    if heads_ok:
+        q = ctx.shard(q, "batch", None, "model", None)
+        k = ctx.shard(k, "batch", None, "model", None)
+        v = ctx.shard(v, "batch", None, "model", None)
+    else:
+        q = ctx.shard(q, "batch", "model", None, None)
+        k = ctx.shard(k, "batch", None, None, None)
+        v = ctx.shard(v, "batch", None, None, None)
+    out = full_attention(q, k, v, window=cfg.sliding_window)
+    out = out.reshape(B, S, cfg.num_heads * cfg.head_dim)
+    y = out @ p["wo"]
+    return ctx.shard_residual(y), {"k": k, "v": v}
+
+
+def init_kv_cache(
+    cfg: ModelConfig, batch: int, max_seq: int, dtype=None
+) -> Dict[str, jax.Array]:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    span = min(max_seq, cfg.sliding_window) if cfg.sliding_window else max_seq
+    shape = (batch, span, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attn_decode(
+    cfg: ModelConfig,
+    p: Dict[str, jax.Array],
+    x: jax.Array,                       # (B, 1, D)
+    cache: Dict[str, jax.Array],
+    pos: jax.Array,                     # scalar int32: current position
+    ctx: ShardCtx = ShardCtx(),
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One decode step against a pre-allocated (possibly circular) cache."""
+    B = x.shape[0]
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    q, k, v = _project_qkv(cfg, p, x)                       # (B,1,·,hd)
+    posb = jnp.full((B, 1), pos)
+    q = apply_rope(q, posb, cfg.rope_theta)
+    k = apply_rope(k, posb, cfg.rope_theta)
+    span = cache["k"].shape[1]
+    slot = jnp.where(cfg.sliding_window > 0, pos % span, jnp.minimum(pos, span - 1))
+    ck = lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    cv = lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+
+    G = cfg.num_heads // K
+    qg = q.reshape(B, 1, K, G, hd)
+    s = _gqa_scores(qg, ck) * (hd ** -0.5)                  # (B,K,G,1,span)
+    idx = jnp.arange(span)
+    if cfg.sliding_window:
+        valid = idx <= pos                                  # ring holds last W
+    else:
+        valid = idx <= pos
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", pr.astype(cv.dtype), cv)
+    o = o.reshape(B, 1, cfg.num_heads * hd)
+    y = o @ p["wo"]
+    return ctx.shard(y, "batch", None, None), {"k": ck, "v": cv}

@@ -1,0 +1,39 @@
+"""Modality frontend STUBS (the one permitted carve-out).
+
+``[audio]`` and ``[vlm]`` architectures specify only the transformer
+backbone; the mel-spectrogram/EnCodec conv stack and the ViT/SigLIP vision
+encoder are not implemented.  Instead, ``frontend_embeddings`` produces
+precomputed frame/patch embeddings of the correct shape — deterministic
+pseudo-features so tests are reproducible — and ``input_specs`` (launch/
+dryrun) advertises the matching ShapeDtypeStruct.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def frontend_embeddings(
+    cfg: ModelConfig, batch: int, key: Optional[jax.Array] = None
+) -> Optional[jax.Array]:
+    """(B, frontend_tokens, d_model) stand-in features, or None."""
+    if not cfg.frontend:
+        return None
+    if key is None:
+        key = jax.random.PRNGKey(hash(cfg.frontend) % (2**31))
+    emb = jax.random.normal(
+        key, (batch, cfg.frontend_tokens, cfg.d_model), jnp.float32
+    )
+    return (emb * 0.02).astype(jnp.dtype(cfg.dtype))
+
+
+def frontend_spec(cfg: ModelConfig, batch: int):
+    if not cfg.frontend:
+        return None
+    return jax.ShapeDtypeStruct(
+        (batch, cfg.frontend_tokens, cfg.d_model), jnp.dtype(cfg.dtype)
+    )

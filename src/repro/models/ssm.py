@@ -1,0 +1,211 @@
+"""Mamba2 (SSD — state-space duality) block [arXiv:2405.21060].
+
+Full-sequence processing uses the chunked SSD algorithm: quadratic
+attention-like computation inside chunks of length ``ssm_chunk`` plus a
+linear inter-chunk recurrence, giving O(S * Q) work and an O(1)-state decode
+step.  This is the sub-quadratic path that makes ``long_500k`` feasible.
+
+The chunk-local quadratic part is also implemented as a Pallas TPU kernel
+(kernels/ssd_scan) with this file's ``_chunk_math`` as its oracle.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, rms_norm
+from repro.sharding.specs import ShardCtx
+
+
+def init_ssm_params(cfg: ModelConfig, key) -> Dict[str, jax.Array]:
+    d, di, ns, nh = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_nheads
+    w = cfg.ssm_conv_width
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    ch = di + 2 * ns
+    return {
+        "wz": dense_init(ks[0], (d, di), dtype=dt),
+        "wx": dense_init(ks[1], (d, di), dtype=dt),
+        "wB": dense_init(ks[2], (d, ns), dtype=dt),
+        "wC": dense_init(ks[3], (d, ns), dtype=dt),
+        "wdt": dense_init(ks[4], (d, nh), dtype=dt),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "A_log": jnp.log(
+            jax.random.uniform(ks[5], (nh,), jnp.float32, 1.0, 16.0)
+        ),
+        "D": jnp.ones((nh,), jnp.float32),
+        "conv_w": dense_init(ks[6], (w, ch), in_dim=w, dtype=dt),
+        "conv_b": jnp.zeros((ch,), dt),
+        "norm_scale": jnp.ones((di,), dt),
+        "out_proj": dense_init(ks[7], (di, d), dtype=dt),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv.  u: (B, S, C); w: (W, C)."""
+    W = w.shape[0]
+    up = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    S = u.shape[1]
+    out = sum(up[:, i : i + S] * w[i] for i in range(W))
+    return out + b
+
+
+def _proj_inputs(cfg: ModelConfig, p, x: jax.Array):
+    z = x @ p["wz"]
+    xs = x @ p["wx"]
+    Bc = x @ p["wB"]
+    Cc = x @ p["wC"]
+    dt = jax.nn.softplus(
+        (x @ p["wdt"]).astype(jnp.float32) + p["dt_bias"]
+    )                                                        # (B,S,nh) f32
+    return z, xs, Bc, Cc, dt
+
+
+def _chunk_math(x_c, B_c, C_c, dt_c, dA_c, H):
+    """One SSD chunk.
+
+    x_c: (Bt,Q,nh,hp); B_c/C_c: (Bt,Q,ns); dt_c/dA_c: (Bt,Q,nh) f32;
+    H: (Bt,nh,ns,hp) f32 carried state.  Returns (Y_c, H_next).
+    """
+    cum = jnp.cumsum(dA_c, axis=1)                           # (Bt,Q,nh)
+    # --- intra-chunk (quadratic within the chunk) ---
+    diff = cum[:, :, None, :] - cum[:, None, :, :]           # (Bt,i,j,nh)
+    Q = x_c.shape[1]
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    # mask BEFORE exp: above-diagonal diffs are positive and overflow,
+    # which would poison the backward pass through the where (NaN * 0)
+    diff = jnp.where(causal[None, :, :, None], diff, -1e30)
+    L = jnp.exp(diff)
+    CB = jnp.einsum("bis,bjs->bij", C_c.astype(jnp.float32),
+                    B_c.astype(jnp.float32))
+    M = CB[:, :, :, None] * L * dt_c[:, None, :, :]          # (Bt,i,j,nh)
+    Y_intra = jnp.einsum("bijn,bjnp->binp", M, x_c.astype(jnp.float32))
+    # --- inter-chunk (incoming state) ---
+    Y_inter = jnp.einsum(
+        "bis,bnsp->binp", C_c.astype(jnp.float32), H
+    ) * jnp.exp(cum)[..., None]
+    # --- state update ---
+    w = jnp.exp(cum[:, -1:, :] - cum) * dt_c                 # (Bt,Q,nh)
+    S_c = jnp.einsum(
+        "bjn,bjs,bjnp->bnsp", w, B_c.astype(jnp.float32),
+        x_c.astype(jnp.float32),
+    )
+    H_next = H * jnp.exp(cum[:, -1])[:, :, None, None] + S_c
+    return Y_intra + Y_inter, H_next
+
+
+def ssd_scan(
+    x: jax.Array,      # (B, S, nh, hp)
+    B_in: jax.Array,   # (B, S, ns)
+    C_in: jax.Array,   # (B, S, ns)
+    dt: jax.Array,     # (B, S, nh) f32
+    A: jax.Array,      # (nh,) f32, negative
+    chunk: int,
+    h0: jax.Array | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD.  Returns (y (B,S,nh,hp), final state (B,nh,ns,hp))."""
+    Bt, S, nh, hp = x.shape
+    ns = B_in.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, f"seq {S} not divisible by chunk {Q}"
+    nch = S // Q
+    dA = dt * A                                              # (B,S,nh)
+
+    xc = x.reshape(Bt, nch, Q, nh, hp).transpose(1, 0, 2, 3, 4)
+    Bc = B_in.reshape(Bt, nch, Q, ns).transpose(1, 0, 2, 3)
+    Cc = C_in.reshape(Bt, nch, Q, ns).transpose(1, 0, 2, 3)
+    dtc = dt.reshape(Bt, nch, Q, nh).transpose(1, 0, 2, 3)
+    dAc = dA.reshape(Bt, nch, Q, nh).transpose(1, 0, 2, 3)
+
+    if h0 is None:
+        h0 = jnp.zeros((Bt, nh, ns, hp), jnp.float32)
+
+    def body(H, inputs):
+        x_c, B_c, C_c, dt_c, dA_c = inputs
+        Y, H_next = _chunk_math(x_c, B_c, C_c, dt_c, dA_c, H)
+        return H_next, Y.astype(x.dtype)
+
+    H_final, Ys = lax.scan(body, h0, (xc, Bc, Cc, dtc, dAc))
+    y = Ys.transpose(1, 0, 2, 3, 4).reshape(Bt, S, nh, hp)
+    return y, H_final
+
+
+def ssm_forward(
+    cfg: ModelConfig,
+    p: Dict[str, jax.Array],
+    x: jax.Array,
+    ctx: ShardCtx = ShardCtx(),
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Full-sequence Mamba2 block.  Returns (y, state) for prefill caching."""
+    B, S, _ = x.shape
+    di, ns, nh, hp = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    z, xs, Bc, Cc, dt = _proj_inputs(cfg, p, x)
+    # pin the head-parallel layout through the whole block: without these
+    # constraints XLA re-gathers activations around the SSD einsums
+    # (85 GB/step of dot_general all-gathers on jamba train, dry-run HLO)
+    z = ctx.shard(z, "batch", None, "model")
+    dt = ctx.shard(dt, "batch", None, "model")
+    u = jnp.concatenate([xs, Bc, Cc], axis=-1)
+    conv_tail = u[:, -(cfg.ssm_conv_width - 1):, :]
+    u = jax.nn.silu(_causal_conv(u, p["conv_w"], p["conv_b"]))
+    xs, Bc, Cc = jnp.split(u, [di, di + ns], axis=-1)
+    xs = ctx.shard(xs, "batch", None, "model")
+    xh = xs.reshape(B, S, nh, hp)
+    xh = ctx.shard(xh, "batch", None, "model", None)
+    A = -jnp.exp(p["A_log"])
+    y, H = ssd_scan(xh, Bc, Cc, dt, A, cfg.ssm_chunk)
+    y = y + (p["D"][:, None] * xh.astype(jnp.float32)).astype(y.dtype)
+    y = ctx.shard(y, "batch", None, "model", None)
+    y = y.reshape(B, S, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_scale"], cfg.norm_eps)
+    y = ctx.shard(y, "batch", None, "model")
+    out = y @ p["out_proj"]
+    out = ctx.shard_residual(out)
+    state = {"h": H, "conv": conv_tail}
+    return out, state
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=None) -> Dict[str, jax.Array]:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    di, ns, nh, hp = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    return {
+        "h": jnp.zeros((batch, nh, ns, hp), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, di + 2 * ns), dtype),
+    }
+
+
+def ssm_decode(
+    cfg: ModelConfig,
+    p: Dict[str, jax.Array],
+    x: jax.Array,                      # (B, 1, D)
+    state: Dict[str, jax.Array],
+    ctx: ShardCtx = ShardCtx(),
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """O(1) decode step: recurrent SSM update."""
+    B = x.shape[0]
+    di, ns, nh, hp = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    z, xs, Bc, Cc, dt = _proj_inputs(cfg, p, x)              # (B,1,·)
+    u_t = jnp.concatenate([xs, Bc, Cc], axis=-1)             # (B,1,ch)
+    win = jnp.concatenate([state["conv"], u_t], axis=1)      # (B,W,ch)
+    conv_out = jnp.einsum("bwc,wc->bc", win.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32))
+    conv_out = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32))
+    xs, Bc, Cc = jnp.split(conv_out.astype(x.dtype), [di, di + ns], axis=-1)
+    xh = xs.reshape(B, nh, hp).astype(jnp.float32)
+    dt1 = dt[:, 0]                                           # (B,nh)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt1 * A)                                    # (B,nh)
+    h = state["h"] * dA[:, :, None, None] + jnp.einsum(
+        "bs,bnp,bn->bnsp", Bc.astype(jnp.float32), xh, dt1
+    )
+    y = jnp.einsum("bs,bnsp->bnp", Cc.astype(jnp.float32), h)
+    y = y + p["D"][:, None] * xh
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_scale"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    new_state = {"h": h, "conv": win[:, 1:]}
+    return ctx.shard(out, "batch", None, None), new_state

@@ -1,0 +1,4 @@
+from repro.serving.generate import greedy_generate
+from repro.serving.kvcache import cache_from_prefill
+
+__all__ = ["greedy_generate", "cache_from_prefill"]

@@ -1,0 +1,39 @@
+"""Reference generation loop (model-based batching).
+
+This is the baseline execution order every offloading baseline shares: one
+unified batch through the whole model, prefill then auto-regressive decode.
+The module-batching engine (core/engine.py) must produce identical tokens.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_mod
+from repro.serving.kvcache import cache_from_prefill
+from repro.serving.sampling import greedy
+from repro.sharding.specs import ShardCtx
+
+
+def greedy_generate(
+    cfg: ModelConfig,
+    params,
+    tokens: jax.Array,                 # (B, S) prompt
+    decode_len: int,
+    frontend_emb: Optional[jax.Array] = None,
+    ctx: ShardCtx = ShardCtx(),
+) -> jax.Array:
+    """Returns (B, decode_len) generated tokens (greedy)."""
+    B, S = tokens.shape
+    logits, caches = model_mod.prefill(cfg, params, tokens, frontend_emb, ctx)
+    cache = cache_from_prefill(cfg, caches, S, max_seq=S + decode_len)
+    out = [greedy(logits[:, 0])]
+    for t in range(decode_len - 1):
+        logits, cache = model_mod.decode_step(
+            cfg, params, cache, out[-1], jnp.int32(S + t), ctx
+        )
+        out.append(greedy(logits))
+    return jnp.stack(out, axis=1)

@@ -1,0 +1,50 @@
+"""KV-cache conversion and (host-)offloaded cache management.
+
+``model.prefill`` returns raw per-layer K/V stacked over layer groups;
+decode expects pre-allocated (possibly ring-buffer) caches.  This module
+converts between the two, handling sliding-window ring alignment (absolute
+position p lives in slot ``p % window``).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_mod
+
+
+def cache_from_prefill(
+    cfg: ModelConfig, caches: List, seq_len: int, max_seq: int
+) -> List:
+    """Convert prefill caches into decode-ready buffers of span ``max_seq``."""
+    pattern = model_mod.layer_pattern(cfg)
+    out = []
+    for j, (kind, _) in enumerate(pattern):
+        slot = caches[j]
+        if kind != "attn":
+            out.append(slot)                       # SSM state passes through
+            continue
+        k, v = slot["k"], slot["v"]               # (G, B, S, K, hd)
+        G, B, S, K, hd = k.shape
+        span = min(max_seq, cfg.sliding_window) if cfg.sliding_window else max_seq
+        nk = jnp.zeros((G, B, span, K, hd), k.dtype)
+        nv = jnp.zeros_like(nk)
+        n = min(S, span)
+        if cfg.sliding_window and S > span:
+            # ring alignment: token at absolute pos p -> slot p % span
+            pos = jnp.arange(S - n, S)
+            slots = pos % span
+            nk = nk.at[:, :, slots].set(k[:, :, -n:])
+            nv = nv.at[:, :, slots].set(v[:, :, -n:])
+        else:
+            nk = nk.at[:, :, :n].set(k[:, :, -n:])
+            nv = nv.at[:, :, :n].set(v[:, :, -n:])
+        out.append({"k": nk, "v": nv})
+    return out
+
+
+def cache_bytes(cache: List) -> int:
+    return sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(cache))

@@ -1,0 +1,21 @@
+"""Token sampling strategies (the engine itself is greedy, paper §B)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1)
+
+
+def temperature_sample(key, logits: jax.Array, temperature: float = 1.0):
+    if temperature <= 0:
+        return greedy(logits)
+    return jax.random.categorical(key, logits / temperature, axis=-1)
+
+
+def top_k_sample(key, logits: jax.Array, k: int, temperature: float = 1.0):
+    vals, idx = jax.lax.top_k(logits, k)
+    choice = jax.random.categorical(key, vals / max(temperature, 1e-6), axis=-1)
+    return jnp.take_along_axis(idx, choice[..., None], axis=-1)[..., 0]

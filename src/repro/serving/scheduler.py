@@ -1,0 +1,92 @@
+"""Offline inference scheduler: dataset -> accumulated batches -> engine.
+
+The paper's workload: complete an entire dataset (Table 4) with prompts
+padded/truncated to a uniform length.  The scheduler slices the request set
+into accumulated batches of ``B`` sequences (from the planner), runs each
+through the module-batching engine, and reports aggregate timing.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.dag_builder import Plan
+from repro.core.engine import ModuleBatchingEngine
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray            # (S,) int32
+    decode_len: int
+
+
+@dataclass
+class BatchResult:
+    tokens: np.ndarray            # (B, decode_len)
+    prefill_s: float
+    decode_s: float
+
+
+@dataclass
+class ServeReport:
+    results: List[BatchResult] = field(default_factory=list)
+
+    @property
+    def total_s(self) -> float:
+        return sum(r.prefill_s + r.decode_s for r in self.results)
+
+    @property
+    def decode_tokens(self) -> int:
+        return sum(r.tokens.size for r in self.results)
+
+    @property
+    def decode_throughput(self) -> float:
+        d = sum(r.decode_s for r in self.results)
+        return self.decode_tokens / d if d > 0 else 0.0
+
+
+def pad_requests(requests: List[Request], pad_id: int = 0) -> np.ndarray:
+    """Pad/truncate to uniform length (paper §5.1 evaluation protocol)."""
+    S = max(len(r.prompt) for r in requests)
+    out = np.full((len(requests), S), pad_id, np.int32)
+    for i, r in enumerate(requests):
+        p = r.prompt[:S]
+        out[i, : len(p)] = p
+    return out
+
+
+def serve_dataset(
+    cfg: ModelConfig,
+    params,
+    requests: List[Request],
+    plan: Plan,
+    decode_len: int,
+    max_seq: Optional[int] = None,
+) -> ServeReport:
+    report = ServeReport()
+    B = max(1, plan.B)
+    for lo in range(0, len(requests), B):
+        chunk = requests[lo : lo + B]
+        prompts = pad_requests(chunk)
+        engine = ModuleBatchingEngine(
+            cfg, params, plan,
+            max_seq=max_seq or prompts.shape[1] + decode_len,
+        )
+        t0 = time.perf_counter()
+        logits = engine.prefill(jnp.asarray(prompts))
+        logits.block_until_ready()
+        t1 = time.perf_counter()
+        toks = [np.asarray(jnp.argmax(logits, axis=-1))]
+        for t in range(decode_len - 1):
+            lg = engine.decode_step(jnp.asarray(toks[-1]), prompts.shape[1] + t)
+            toks.append(np.asarray(jnp.argmax(lg, axis=-1)))
+        t2 = time.perf_counter()
+        report.results.append(
+            BatchResult(np.stack(toks, 1), t1 - t0, t2 - t1)
+        )
+    return report

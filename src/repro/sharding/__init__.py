@@ -1,0 +1,3 @@
+from repro.sharding.specs import ShardCtx, param_shardings
+
+__all__ = ["ShardCtx", "param_shardings"]

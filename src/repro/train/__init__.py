@@ -1,0 +1,10 @@
+from repro.train.optimizer import adamw_init, adamw_update
+from repro.train.train_loop import TrainState, make_train_step, train_loop
+
+__all__ = [
+    "adamw_init",
+    "adamw_update",
+    "TrainState",
+    "make_train_step",
+    "train_loop",
+]

@@ -1,0 +1,52 @@
+"""Flat-npz checkpointing for arbitrary param pytrees."""
+from __future__ import annotations
+
+import os
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(params) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            flat[key + "::bf16"] = arr.astype(np.float32)
+        else:
+            flat[key] = arr
+    return flat
+
+
+def save_checkpoint(path: str, params, step: int = 0) -> str:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(params)
+    flat["__step__"] = np.asarray(step)
+    np.savez(path, **flat)
+    return path
+
+
+def load_checkpoint(path: str, like) -> Tuple[dict, int]:
+    """Restore into the structure of ``like`` (a template pytree)."""
+    if not path.endswith(".npz"):
+        path += ".npz"
+    data = np.load(path)
+    step = int(data["__step__"]) if "__step__" in data else 0
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like)
+    new_leaves = []
+    for path_elems, leaf in leaves_with_path:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path_elems
+        )
+        if key + "::bf16" in data:
+            arr = jnp.asarray(data[key + "::bf16"]).astype(jnp.bfloat16)
+        else:
+            arr = jnp.asarray(data[key]).astype(leaf.dtype)
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        new_leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), step

@@ -1,0 +1,84 @@
+"""Training loop: jitted train_step with optional sharding, remat, ZeRO-1."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_mod
+from repro.sharding.specs import ShardCtx
+from repro.train.optimizer import AdamWState, adamw_init, adamw_update
+
+
+@dataclass
+class TrainState:
+    params: dict
+    opt: AdamWState
+    step: int = 0
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    ctx: ShardCtx = ShardCtx(),
+    lr: float = 3e-4,
+    remat: bool = True,
+    aux_weight: float = 0.01,
+    remat_policy: str = "full",
+) -> Callable:
+    """Returns train_step(params, opt, tokens, labels[, frontend_emb])."""
+
+    def train_step(params, opt, tokens, labels, frontend_emb=None):
+        def loss(p):
+            return model_mod.loss_fn(
+                cfg, p, tokens, labels, frontend_emb, ctx,
+                remat=remat, aux_weight=aux_weight, remat_policy=remat_policy,
+            )
+
+        (total, (nll, aux)), grads = jax.value_and_grad(loss, has_aux=True)(
+            params
+        )
+        params, opt, gnorm = adamw_update(params, grads, opt, lr=lr)
+        metrics = {"loss": total, "nll": nll, "aux": aux, "gnorm": gnorm}
+        return params, opt, metrics
+
+    return train_step
+
+
+def train_loop(
+    cfg: ModelConfig,
+    params,
+    batches: Iterator[Tuple[jnp.ndarray, jnp.ndarray]],
+    steps: int,
+    ctx: ShardCtx = ShardCtx(),
+    lr: float = 3e-4,
+    log_every: int = 10,
+    frontend_emb=None,
+    checkpoint_path: Optional[str] = None,
+    checkpoint_every: int = 0,
+):
+    """Simple synchronous training driver (examples/train_small.py)."""
+    from repro.train.checkpoint import save_checkpoint
+
+    step_fn = jax.jit(make_train_step(cfg, ctx, lr=lr))
+    opt = adamw_init(params)
+    history = []
+    t0 = time.perf_counter()
+    for i in range(steps):
+        tokens, labels = next(batches)
+        params, opt, metrics = step_fn(params, opt, tokens, labels, frontend_emb)
+        if (i + 1) % log_every == 0 or i == 0:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = i + 1
+            m["elapsed_s"] = time.perf_counter() - t0
+            history.append(m)
+            print(
+                f"step {i+1:5d} loss={m['loss']:.4f} nll={m['nll']:.4f} "
+                f"aux={m['aux']:.4f} gnorm={m['gnorm']:.2f}"
+            )
+        if checkpoint_path and checkpoint_every and (i + 1) % checkpoint_every == 0:
+            save_checkpoint(checkpoint_path, params, step=i + 1)
+    return params, opt, history

@@ -1,0 +1,16 @@
+import os
+import sys
+
+# tests run on ONE CPU device (the dry-run sets its own 512-device flag in a
+# separate process; never set it here — see launch/dryrun.py)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,77 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core import workload as W
+from repro.core.planner import host_batch_limit
+from repro.core.hardware import A5000_C2
+from repro.models.layers import apply_rope
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    pos=st.integers(0, 1_000_000),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rope_preserves_norm(pos, seed):
+    """Rotary embedding is a rotation: vector norms are invariant."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, 1, 2, 64))
+    y = apply_rope(x, jnp.full((1, 1), pos), 10_000.0)
+    nx = jnp.linalg.norm(x, axis=-1)
+    ny = jnp.linalg.norm(y, axis=-1)
+    assert bool(jnp.allclose(nx, ny, rtol=1e-4))
+
+
+@settings(max_examples=25, deadline=None)
+@given(ctx=st.integers(1, 100_000))
+def test_kv_bytes_monotone_in_context(ctx):
+    cfg = get_config("mixtral-8x7b")
+    assert W.kv_bytes_per_seq(cfg, ctx) <= W.kv_bytes_per_seq(cfg, ctx + 64)
+
+
+@settings(max_examples=25, deadline=None)
+@given(ctx=st.integers(16, 65_536))
+def test_host_limit_monotone_decreasing_in_context(ctx):
+    """Longer contexts => fewer sequences fit in host memory (Eq. 2)."""
+    cfg = get_config("mixtral-8x7b")
+    assert host_batch_limit(cfg, A5000_C2, ctx) >= host_batch_limit(
+        cfg, A5000_C2, ctx * 2
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(ctx=st.integers(1, 1 << 20))
+def test_swa_kv_bytes_capped_by_window(ctx):
+    cfg = get_config("h2o-danube-1.8b")
+    cap = W.kv_bytes_per_seq(cfg, cfg.sliding_window)
+    assert W.kv_bytes_per_seq(cfg, ctx) <= cap + 1e-6
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    s=st.integers(2, 8),
+    seed=st.integers(0, 1000),
+)
+def test_causal_masking_property(b, s, seed):
+    """Future tokens never influence current logits."""
+    from repro.models import model as M
+
+    cfg = get_config("internlm2-1.8b", smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(seed), (b, s), 0,
+                              cfg.vocab_size)
+    base, _, _ = M.forward(cfg, params, toks)
+    # perturb the last token: logits for positions < s-1 must be unchanged
+    toks2 = toks.at[:, -1].set((toks[:, -1] + 1) % cfg.vocab_size)
+    pert, _, _ = M.forward(cfg, params, toks2)
+    assert bool(
+        jnp.allclose(
+            base[:, : s - 1].astype(jnp.float32),
+            pert[:, : s - 1].astype(jnp.float32),
+            atol=1e-3,
+        )
+    )

@@ -1,0 +1,73 @@
+"""Roofline analysis module: analytic terms and report assembly."""
+import json
+import os
+
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.launch.roofline import (
+    memory_bytes_per_device,
+    model_flops,
+)
+
+
+def test_memory_components_positive():
+    for arch in ("olmoe-1b-7b", "jamba-1.5-large-398b", "qwen2-1.5b"):
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            m = memory_bytes_per_device(cfg, shape)
+            assert m["total"] > 0
+            assert all(v >= 0 for v in m.values())
+
+
+def test_model_flops_train_is_6nd():
+    cfg = get_config("qwen2-1.5b")
+    shape = SHAPES["train_4k"]
+    n = cfg.param_counts()["active"]
+    assert model_flops(cfg, shape) == pytest.approx(
+        6 * n * shape.global_batch * shape.seq_len
+    )
+
+
+def test_model_flops_moe_uses_active_params():
+    moe = get_config("phi3.5-moe-42b-a6.6b")
+    assert model_flops(moe, SHAPES["train_4k"]) < 0.3 * (
+        6 * moe.param_counts()["total"]
+        * SHAPES["train_4k"].global_batch * SHAPES["train_4k"].seq_len
+    )
+
+
+def test_decode_flops_per_token():
+    cfg = get_config("qwen2-1.5b")
+    d = SHAPES["decode_32k"]
+    # decode: 2 * N_active * batch (one token each)
+    assert model_flops(cfg, d) == pytest.approx(
+        2 * cfg.param_counts()["active"] * d.global_batch
+    )
+
+
+def test_weight_stationary_reduces_memory_term():
+    cfg = get_config("olmoe-1b-7b")
+    d = SHAPES["decode_32k"]
+    fsdp = memory_bytes_per_device(cfg, d, "fsdp")["total"]
+    tp = memory_bytes_per_device(cfg, d, "tp")["total"]
+    assert tp < fsdp
+
+
+def test_dryrun_reports_parse_if_present():
+    rep_dir = os.path.join(os.path.dirname(__file__), "..", "reports", "dryrun")
+    if not os.path.isdir(rep_dir):
+        pytest.skip("no dry-run reports generated")
+    files = [f for f in os.listdir(rep_dir) if f.endswith(".json")]
+    if not files:
+        pytest.skip("no dry-run reports generated")
+    ok = 0
+    for f in files:
+        with open(os.path.join(rep_dir, f)) as fh:
+            d = json.load(fh)
+        assert d["status"] in ("ok", "skipped", "failed")
+        if d["status"] == "ok":
+            ok += 1
+            assert d.get("dot_flops_per_device") is not None
+            assert d.get("collective_bytes") is not None
+    assert ok > 0

@@ -1,0 +1,77 @@
+"""SSD scan: chunked algorithm vs sequential recurrence; decode consistency."""
+import jax
+import jax.numpy as jnp
+
+from repro.models.ssm import ssd_scan
+
+KEY = jax.random.PRNGKey(3)
+
+
+def sequential_ssd(x, B_in, C_in, dt, A):
+    """Token-by-token recurrence: h_t = h_{t-1} e^{dt A} + dt B x;  y = C h."""
+    Bt, S, nh, hp = x.shape
+    ns = B_in.shape[-1]
+    h = jnp.zeros((Bt, nh, ns, hp))
+    ys = []
+    for t in range(S):
+        dA = jnp.exp(dt[:, t] * A)                              # (B,nh)
+        h = h * dA[:, :, None, None] + jnp.einsum(
+            "bs,bnp,bn->bnsp", B_in[:, t], x[:, t], dt[:, t]
+        )
+        ys.append(jnp.einsum("bs,bnsp->bnp", C_in[:, t], h))
+    return jnp.stack(ys, axis=1), h
+
+
+def _inputs(Bt=2, S=64, nh=4, hp=8, ns=8):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (Bt, S, nh, hp)) * 0.5
+    B_in = jax.random.normal(ks[1], (Bt, S, ns)) * 0.5
+    C_in = jax.random.normal(ks[2], (Bt, S, ns)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (Bt, S, nh)))
+    A = -jnp.exp(jax.random.normal(ks[4], (nh,)) * 0.3)
+    return x, B_in, C_in, dt, A
+
+
+def test_chunked_equals_sequential():
+    x, B_in, C_in, dt, A = _inputs()
+    y_ref, h_ref = sequential_ssd(x, B_in, C_in, dt, A)
+    for chunk in (16, 32, 64):
+        y, h = ssd_scan(x, B_in, C_in, dt, A, chunk)
+        assert jnp.max(jnp.abs(y - y_ref)) < 1e-3, chunk
+        assert jnp.max(jnp.abs(h - h_ref)) < 1e-3, chunk
+
+
+def test_chunk_size_invariance():
+    x, B_in, C_in, dt, A = _inputs(S=128)
+    y16, h16 = ssd_scan(x, B_in, C_in, dt, A, 16)
+    y64, h64 = ssd_scan(x, B_in, C_in, dt, A, 64)
+    assert jnp.max(jnp.abs(y16 - y64)) < 1e-3
+    assert jnp.max(jnp.abs(h16 - h64)) < 1e-3
+
+
+def test_ssm_decode_matches_full():
+    """full-sequence block output at position t == step-by-step decode."""
+    from repro.configs import get_config
+    from repro.models.ssm import init_ssm_params, ssm_forward, ssm_decode
+
+    cfg = get_config("mamba2-370m", smoke=True)
+    p = init_ssm_params(cfg, KEY)
+    B, S = 2, 16
+    x = (jax.random.normal(KEY, (B, S, cfg.d_model)) * 0.1).astype(
+        jnp.dtype(cfg.dtype)
+    )
+    y_full, state_full = ssm_forward(cfg, p, x)
+    # replay token-by-token
+    from repro.models.ssm import init_ssm_state
+
+    st = init_ssm_state(cfg, B)
+    outs = []
+    for t in range(S):
+        y, st = ssm_decode(cfg, p, x[:, t : t + 1], st)
+        outs.append(y[:, 0])
+    y_step = jnp.stack(outs, axis=1)
+    diff = jnp.max(jnp.abs(y_full.astype(jnp.float32) -
+                           y_step.astype(jnp.float32)))
+    assert diff < 0.05, diff          # bf16 path tolerance
+    hdiff = jnp.max(jnp.abs(state_full["h"] - st["h"]))
+    assert hdiff < 0.05, hdiff

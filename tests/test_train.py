@@ -1,0 +1,72 @@
+"""Training substrate: loss decreases, checkpoint roundtrip, chunked CE."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.datasets import synthetic_batches
+from repro.models import model as M
+from repro.models.layers import softmax_cross_entropy
+from repro.train.checkpoint import load_checkpoint, save_checkpoint
+from repro.train.optimizer import adamw_init
+from repro.train.train_loop import make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_loss_decreases():
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    params = M.init_params(cfg, KEY)
+    step = jax.jit(make_train_step(cfg, lr=3e-3, remat=False))
+    opt = adamw_init(params)
+    batches = synthetic_batches(cfg.vocab_size, 4, 32)
+    # fixed batch => loss must drop when overfitting it
+    tokens, labels = next(batches)
+    tokens, labels = jnp.asarray(tokens), jnp.asarray(labels)
+    first = None
+    for i in range(12):
+        params, opt, m = step(params, opt, tokens, labels)
+        if first is None:
+            first = float(m["loss"])
+    assert float(m["loss"]) < first - 0.2, (first, float(m["loss"]))
+
+
+def test_chunked_loss_matches_full_logits():
+    cfg = get_config("internlm2-1.8b", smoke=True)
+    params = M.init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (2, 32), 0, cfg.vocab_size)
+    labels = jnp.roll(toks, -1, 1)
+    loss_chunked, (nll, aux) = M.loss_fn(
+        cfg, params, toks, labels, remat=False, aux_weight=0.0, vocab_chunk=8
+    )
+    logits, _, _ = M.forward(cfg, params, toks)
+    nll_full = softmax_cross_entropy(logits, labels)
+    assert abs(float(loss_chunked) - float(nll_full)) < 2e-2
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = get_config("olmoe-1b-7b", smoke=True)
+    params = M.init_params(cfg, KEY)
+    path = os.path.join(tmp_path, "ckpt.npz")
+    save_checkpoint(path, params, step=17)
+    like = jax.tree.map(lambda a: jnp.zeros_like(a), params)
+    restored, step = load_checkpoint(path, like)
+    assert step == 17
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_grad_clip_bounds_update():
+    from repro.train.optimizer import adamw_update
+
+    params = {"w": jnp.ones((4, 4))}
+    grads = {"w": jnp.full((4, 4), 1e6)}
+    state = adamw_init(params)
+    new_params, _, gnorm = adamw_update(params, grads, state, lr=1e-2,
+                                        weight_decay=0.0)
+    assert float(gnorm) > 1e5
+    # clipped: update magnitude ~ lr
+    assert float(jnp.max(jnp.abs(new_params["w"] - params["w"]))) < 0.05
