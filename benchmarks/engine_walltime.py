@@ -34,27 +34,29 @@ def engine_walltime() -> Table:
     jax.block_until_ready(ref)
     t_ref = time.perf_counter() - t0
 
-    # module-based engine
-    eng = ModuleBatchingEngine(
-        cfg, params, Plan(B=B, b_a=4, b_e=64, omega=0.0), max_seq=S + DEC
-    )
-    t0 = time.perf_counter()
-    lg = eng.prefill(toks)
-    jax.block_until_ready(lg)
-    t_pre = time.perf_counter() - t0
-    out = [jnp.argmax(lg, -1)]
-    t0 = time.perf_counter()
-    for i in range(DEC - 1):
-        lg = eng.decode_step(out[-1], S + i)
-        out.append(jnp.argmax(lg, -1))
-    jax.block_until_ready(out[-1])
-    t_dec = time.perf_counter() - t0
-    got = jnp.stack(out, 1)
-
-    match = float(jnp.mean((ref == got).astype(jnp.float32)))
+    # module-based engine: grouped dispatch vs the per-expert loop oracle
     t.add("model-based(ref)", fmt(t_ref, 2), fmt(B * DEC / t_ref), "100")
-    t.add("moe-gen-engine", fmt(t_pre, 2),
-          fmt(B * (DEC - 1) / max(t_dec, 1e-9)), fmt(100 * match))
+    for path in ("grouped", "loop"):
+        eng = ModuleBatchingEngine(
+            cfg, params, Plan(B=B, b_a=4, b_e=64, omega=0.0),
+            max_seq=S + DEC, expert_path=path,
+        )
+        t0 = time.perf_counter()
+        lg = eng.prefill(toks)
+        jax.block_until_ready(lg)
+        t_pre = time.perf_counter() - t0
+        out = [jnp.argmax(lg, -1)]
+        t0 = time.perf_counter()
+        for i in range(DEC - 1):
+            lg = eng.decode_step(out[-1], S + i)
+            out.append(jnp.argmax(lg, -1))
+        jax.block_until_ready(out[-1])
+        t_dec = time.perf_counter() - t0
+        got = jnp.stack(out, 1)
+
+        match = float(jnp.mean((ref == got).astype(jnp.float32)))
+        t.add(f"moe-gen-engine({path})", fmt(t_pre, 2),
+              fmt(B * (DEC - 1) / max(t_dec, 1e-9)), fmt(100 * match))
     return t
 
 

@@ -75,4 +75,39 @@ def kernel_allclose() -> Table:
     return t
 
 
-ALL = [kernel_allclose]
+def grouped_vs_loop() -> Table:
+    """The engine's expert-stage choice: one grouped launch for all experts
+    (ops.grouped_expert_ffn) vs a sequential per-expert loop over the same
+    (E, C, D) buffer — the launch-count pathology MoE-Gen batches away."""
+    t = Table("grouped_vs_loop",
+              ["path", "shape", "wall_us", "speedup", "maxdiff"])
+    E, C, D, F = 8, 512, 256, 512
+    ks = jax.random.split(KEY, 4)
+    x = (jax.random.normal(ks[0], (E, C, D)) * 0.3).astype(jnp.bfloat16)
+    wg = (jax.random.normal(ks[1], (E, D, F)) * 0.05).astype(jnp.bfloat16)
+    wu = (jax.random.normal(ks[2], (E, D, F)) * 0.05).astype(jnp.bfloat16)
+    wd = (jax.random.normal(ks[3], (E, F, D)) * 0.05).astype(jnp.bfloat16)
+    shape = f"{E}x{C}x{D}x{F}"
+
+    @jax.jit
+    def one_expert(xe, g, u, d_):
+        return (jax.nn.silu(xe @ g) * (xe @ u)) @ d_
+
+    def loop_path():
+        return jnp.stack(
+            [one_expert(x[e], wg[e], wu[e], wd[e]) for e in range(E)]
+        )
+
+    t_loop, want = timed(loop_path)
+    t_grp, got = timed(
+        lambda: ops.grouped_expert_ffn(x, wg, wu, wd, use_kernel=False)
+    )
+    d = float(jnp.max(jnp.abs(got.astype(jnp.float32) -
+                              want.astype(jnp.float32))))
+    t.add("per-expert-loop", shape, fmt(t_loop * 1e6), "1.0", "0")
+    t.add("grouped(1 launch)", shape, fmt(t_grp * 1e6),
+          fmt(t_loop / max(t_grp, 1e-12)), f"{d:.2e}")
+    return t
+
+
+ALL = [kernel_allclose, grouped_vs_loop]

@@ -22,7 +22,9 @@ class Plan:
 
     B: int                 # accumulated batch (sequences) at the MoE stage
     b_a: int               # attention micro-batch (sequences)
-    b_e: int               # expert micro-batch (tokens)
+    b_e: int               # per-expert token capacity C of the grouped
+    #                        (E, C, D) dispatch buffer; routed copies beyond
+    #                        it are dropped (engine counts them in stats)
     omega: float = 0.0     # fraction of attention computed on the host CPU
     s_expert: float = 0.0  # reserved expert prefetch buffer (bytes)
     s_params: float = 0.0  # model weights cached resident on device (bytes)
@@ -174,24 +176,28 @@ def build_decode_layer_dag(
             deps=[mixer_done],
         )
         tokens_per_expert = B * cfg.experts_per_token / cfg.num_experts
+        # grouped dispatch: one launch per expert's share of the (E, C, D)
+        # buffer — no b_e chunk loop (engine §4.2 path).  Padded capacity
+        # slots cost FLOPs too, so a plan with a real capacity constraint
+        # (cap < B) is charged for all cap rows; cap >= B means no buffer
+        # constraint and degenerates to gather-exact execution (the loop /
+        # baseline systems), charged for the routed tokens only.
+        cap = max(1, min(plan.b_e, B))
+        rows = float(cap) if cap < B else tokens_per_expert
         e_bytes = W.expert_weight_bytes(cfg) * miss
         for e in range(cfg.num_experts):
             cp = dag.add(f"expert_w[{e}]", "htod", e_bytes / hw.htod_bw)
-            b_e = max(1, min(plan.b_e, int(tokens_per_expert) or 1))
-            n_chunk = max(1, -(-int(round(tokens_per_expert)) // b_e))
-            for c in range(n_chunk):
-                rows = tokens_per_expert / n_chunk
-                dag.add(
-                    f"expert[{e}.{c}]",
-                    "gpu",
-                    hw.gemm_time(
-                        rows * W.expert_flops_per_token(cfg),
-                        0.0,
-                        rows * 2 * cfg.d_model * W.BYTES,
-                        int(max(rows, 1)),
-                    ),
-                    deps=[cp, router],
-                )
+            dag.add(
+                f"expert[{e}]",
+                "gpu",
+                hw.gemm_time(
+                    rows * W.expert_flops_per_token(cfg),
+                    0.0,
+                    rows * 2 * cfg.d_model * W.BYTES,
+                    int(max(rows, 1)),
+                ),
+                deps=[cp, router],
+            )
     elif cfg.d_ff > 0:
         w_bytes = W.dense_ffn_weight_bytes(cfg) * miss
         cp = dag.add("ffn_w_htod", "htod", w_bytes / hw.htod_bw)
@@ -276,6 +282,10 @@ def build_prefill_layer_dag(
             deps=[mixer_done],
         )
         tokens_per_expert = T * cfg.experts_per_token / cfg.num_experts
+        # capacity rows are computed (zero-padded or not); cap >= T means
+        # no capacity constraint (gather-exact), as in the decode DAG
+        cap = max(1, min(plan.b_e, T))
+        rows = float(cap) if cap < T else tokens_per_expert
         e_bytes = W.expert_weight_bytes(cfg) * miss
         for e in range(cfg.num_experts):
             cp = dag.add(f"expert_w[{e}]", "htod", e_bytes / hw.htod_bw)
@@ -283,10 +293,10 @@ def build_prefill_layer_dag(
                 f"expert[{e}]",
                 "gpu",
                 hw.gemm_time(
-                    tokens_per_expert * W.expert_flops_per_token(cfg),
+                    rows * W.expert_flops_per_token(cfg),
                     0.0,
-                    tokens_per_expert * 2 * cfg.d_model * W.BYTES,
-                    int(max(tokens_per_expert, 1)),
+                    rows * 2 * cfg.d_model * W.BYTES,
+                    int(max(rows, 1)),
                 ),
                 deps=[cp, router],
             )

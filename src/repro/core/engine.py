@@ -8,11 +8,19 @@ batched computations —
   accumulate in host memory until all ``B`` sequences are ready;
 * a fraction ``ω`` of each attention batch is computed on the *host* path
   (``core.host_attention``), where the offloaded KV-cache lives;
-* the sparse-MoE stage then runs **per expert, sequentially**: all tokens
-  routed to expert *e* are gathered (across the whole accumulated batch) and
-  pushed through that expert in chunks of ``b_e`` tokens — so each expert's
-  weights are fetched once per step and amortized over a large batch;
+* the sparse-MoE stage runs as ONE **grouped dispatch**: routed tokens are
+  gathered on device into an ``(E, C, D)`` capacity buffer (``C`` = the
+  plan's per-expert token budget ``b_e``), pushed through a single grouped
+  FFN launch (Pallas on TPU, XLA einsum elsewhere — ``kernels.ops``), and
+  scatter-added back weighted by their gates.  Routing indices never leave
+  the device, so a decode step issues no host syncs; routed copies beyond
+  capacity are dropped and accounted in ``EngineStats``;
 * dense modules (SSM blocks, shared FFNs, lm_head) run at full batch.
+
+The seed's sequential per-expert loop is retained as ``expert_path='loop'``
+— it is the numerical oracle the grouped path is tested against
+(tests/test_grouped_dispatch.py) and the baseline for the loop-vs-grouped
+benchmark (benchmarks/engine_walltime.py).
 
 Outputs are bit-compatible with the reference ``models.decode_step`` up to
 bf16 accumulation order (asserted in tests/test_engine.py).  Every module is
@@ -99,10 +107,25 @@ def _router_module(cfg, router_w, h):
 
 @jax.jit
 def _expert_module(wg, wu, wd, h_chunk):
-    """One expert over a chunk of tokens: the unit the paper batches."""
+    """One expert over a chunk of tokens (the 'loop' oracle path's unit)."""
     g = h_chunk @ wg
     u = h_chunk @ wu
     return (jax.nn.silu(g) * u) @ wd
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "capacity"))
+def _grouped_expert_module(cfg, p, x, capacity):
+    """The whole MoE stage as one on-device launch sequence: norm -> route ->
+    capacity-bucketed gather -> grouped FFN -> weighted scatter-add.
+    Returns (y, kept, dropped); the counters stay on device."""
+    moe = p["moe"]
+    h = rms_norm(x, p["norm2"], cfg.norm_eps)
+    gates, idx, _ = moe_mod.route(cfg, moe["router"], h)
+    return moe_mod.grouped_dispatch(
+        cfg, h, gates, idx,
+        moe["experts_w_gate"], moe["experts_w_up"], moe["experts_w_down"],
+        capacity,
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -134,14 +157,30 @@ def _embed_module(cfg, embed, tokens):
 @dataclass
 class EngineStats:
     attn_microbatches: int = 0
-    expert_launches: int = 0
-    expert_tokens: int = 0
+    expert_launches: int = 0             # grouped: one per MoE layer per step
+    expert_tokens: int = 0               # routed token-copies processed
+    expert_tokens_dropped: int = 0       # routed copies over the b_e capacity
     host_attn_tokens: int = 0
     device_attn_tokens: int = 0
 
 
 class ModuleBatchingEngine:
-    """Executes a batching ``Plan`` over a real model."""
+    """Executes a batching ``Plan`` over a real model.
+
+    ``expert_path`` selects the MoE stage implementation:
+
+    * ``'grouped'`` (default) — one jitted grouped-dispatch launch per MoE
+      layer; routing stays on device, ``plan.b_e`` is the per-expert token
+      capacity ``C`` of the ``(E, C, D)`` dispatch buffer.
+    * ``'loop'`` — the seed's host-scheduled sequential per-expert loop,
+      kept as the numerical oracle (syncs routing to host every step).
+
+    ``grouped_prefill=True`` additionally routes prefill's MoE stage through
+    the same grouped implementation (``ShardCtx(moe_dispatch='grouped')``),
+    so both phases share one expert path.  Caveat: prefill capacity comes
+    from ``cfg.capacity_factor`` (not ``plan.b_e``) and prefill drops are
+    not counted in ``EngineStats`` — opt-in until tuned (see ROADMAP).
+    """
 
     def __init__(
         self,
@@ -149,14 +188,36 @@ class ModuleBatchingEngine:
         params: Dict,
         plan: Plan,
         max_seq: int = 512,
+        expert_path: str = "grouped",
+        grouped_prefill: bool = False,
     ) -> None:
+        assert expert_path in ("grouped", "loop"), expert_path
         self.cfg = cfg
         self.params = params
         self.plan = plan
         self.max_seq = max_seq
+        self.expert_path = expert_path
+        self.grouped_prefill = grouped_prefill
         self.layers = unstack_layers(cfg, params)
         self.cache: Optional[List] = None
         self.stats = EngineStats()
+        # device-side counters, folded into `stats` by sync_stats(); keeping
+        # them lazy is what lets decode_step run without a single host sync.
+        self._kept_dev = jnp.zeros((), jnp.int32)
+        self._dropped_dev = jnp.zeros((), jnp.int32)
+
+    def _expert_capacity(self, batch: int) -> int:
+        """Per-expert capacity C: the plan's b_e, clamped to the most tokens
+        any one expert can receive (top-k indices are distinct per token)."""
+        return max(1, min(self.plan.b_e, batch))
+
+    def sync_stats(self) -> EngineStats:
+        """Materialize the device-side expert counters (one host sync)."""
+        self.stats.expert_tokens += int(self._kept_dev)
+        self.stats.expert_tokens_dropped += int(self._dropped_dev)
+        self._kept_dev = jnp.zeros((), jnp.int32)
+        self._dropped_dev = jnp.zeros((), jnp.int32)
+        return self.stats
 
     # -- cache management ---------------------------------------------
     def init_cache(self, batch: int) -> None:
@@ -178,11 +239,18 @@ class ModuleBatchingEngine:
         self.init_cache(B)
         logits_parts = []
         b_a = max(1, min(plan.b_a, B))
+        from repro.sharding.specs import ShardCtx
+
+        sctx = (
+            ShardCtx(moe_dispatch="grouped")
+            if (self.grouped_prefill and self.expert_path == "grouped")
+            else ShardCtx()
+        )
         for lo in range(0, B, b_a):
             hi = min(B, lo + b_a)
             mb = tokens[lo:hi]
             fe = None if frontend_emb is None else frontend_emb[lo:hi]
-            lg, caches = model_mod.prefill(cfg, self.params, mb, fe)
+            lg, caches = model_mod.prefill(cfg, self.params, mb, fe, sctx)
             logits_parts.append(lg[:, 0])
             self._absorb_prefill_cache(lo, hi, S, caches)
             self.stats.attn_microbatches += 1
@@ -259,7 +327,27 @@ class ModuleBatchingEngine:
         return jnp.concatenate(outs, axis=0)
 
     def _expert_stage(self, p, x) -> jax.Array:
-        """Sequential per-expert execution over the accumulated batch."""
+        if self.expert_path == "grouped":
+            return self._expert_stage_grouped(p, x)
+        return self._expert_stage_loop(p, x)
+
+    def _expert_stage_grouped(self, p, x) -> jax.Array:
+        """One grouped-dispatch launch for the whole MoE stage: routing,
+        gather, expert FFNs and combine all stay on device (§4.2 realized
+        as a single module launch instead of a host-scheduled expert loop)."""
+        y, kept, dropped = _grouped_expert_module(
+            self.cfg, p, x, self._expert_capacity(x.shape[0])
+        )
+        self.stats.expert_launches += 1
+        self._kept_dev = self._kept_dev + kept
+        self._dropped_dev = self._dropped_dev + dropped
+        return y
+
+    def _expert_stage_loop(self, p, x) -> jax.Array:
+        """Sequential per-expert execution (the seed path, kept as the test
+        oracle).  Chunks each expert's gathered tokens by b_e; syncs routing
+        to the host every step — the launch pathology the grouped path
+        removes."""
         cfg, plan = self.cfg, self.plan
         moe = p["moe"]
         h = _norm2_module(cfg, p, x)
@@ -298,4 +386,6 @@ class ModuleBatchingEngine:
         for t in range(decode_len - 1):
             logits = self.decode_step(out[-1], S + t)
             out.append(jnp.argmax(logits, axis=-1))
-        return jnp.stack(out, axis=1)                # (B, decode_len)
+        result = jnp.stack(out, axis=1)              # (B, decode_len)
+        self.sync_stats()                            # fold device counters in
+        return result

@@ -49,10 +49,13 @@ def device_memory_used(
         s_is = W.intermediate_bytes_decode(cfg, plan.b_a, ctx)
     else:
         s_is = W.intermediate_bytes_prefill(cfg, plan.b_a, ctx)
-    # accumulated hidden states for the expert stage + expert micro-batch
-    s_is += plan.B * (ctx if phase == "prefill" else 1) * 2 * cfg.d_model * W.BYTES
+    # accumulated hidden states for the expert stage + the grouped-dispatch
+    # (E, C, D) capacity buffer (C = b_e, clamped to the tokens that exist)
+    tokens = plan.B * (ctx if phase == "prefill" else 1)
+    s_is += tokens * 2 * cfg.d_model * W.BYTES
     if cfg.has_moe:
-        s_is += plan.b_e * 2 * (cfg.moe_d_ff + cfg.d_model) * W.BYTES
+        cap = max(1, min(plan.b_e, tokens))
+        s_is += W.expert_buffer_bytes(cfg, cap)
     return plan.s_params + plan.s_expert + s_dense + kv_gpu + s_is
 
 
@@ -104,8 +107,20 @@ def search_decode(
     n_eval = 0
     e_buf = W.expert_weight_bytes(cfg) if cfg.has_moe else 0.0
     spare_candidates = [0.0]
+    # b_e is the per-expert capacity of the (E, C, D) dispatch buffer:
+    # enumerate headroom factors over the balanced per-expert load (never
+    # below it — under-provisioning trades dropped tokens for speed, which
+    # the throughput objective cannot see), clamped to B (the most tokens
+    # one expert can receive per decode step).
+    if cfg.has_moe:
+        per_e = max(1, -(-B * cfg.experts_per_token // max(cfg.num_experts, 1)))
+        b_e_grid = sorted(
+            {max(1, min(B, int(per_e * f))) for f in (1.0, 1.25, 1.5, 2.0)}
+        )
+    else:
+        b_e_grid = [1]
     for b_a in _pow2_grid(32, max(32, B)):
-        for b_e in _pow2_grid(512, 16384):
+        for b_e in b_e_grid:
             for omega in omega_grid:
                 for s_expert in ({e_buf, 2 * e_buf} if e_buf else {0.0}):
                     for s_params in spare_candidates:
@@ -147,8 +162,16 @@ def search_prefill(
     e_buf = W.expert_weight_bytes(cfg) if cfg.has_moe else 0.0
     for B_try in _pow2_grid(8, max(8, B)):
         for b_a in _pow2_grid(1, B_try):
+            # prefill capacity: the balanced per-expert share of the B*seq
+            # token wave with the config's capacity factor as headroom
+            T = B_try * seq
+            if cfg.has_moe:
+                per_e = T * cfg.experts_per_token / max(cfg.num_experts, 1)
+                b_e = max(1, min(T, int(per_e * cfg.capacity_factor) + 1))
+            else:
+                b_e = 1
             plan = Plan(
-                B=B_try, b_a=b_a, b_e=max(65536, B_try * seq),
+                B=B_try, b_a=b_a, b_e=b_e,
                 omega=0.0, s_expert=e_buf, s_params=0.0, phase="prefill",
             )
             if not device_memory_ok(cfg, hw, plan, seq, "prefill"):

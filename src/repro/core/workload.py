@@ -35,6 +35,17 @@ def expert_weight_bytes(cfg: ModelConfig) -> float:
     return 3 * cfg.d_model * cfg.moe_d_ff * BYTES
 
 
+def expert_buffer_bytes(cfg: ModelConfig, capacity: int) -> float:
+    """Device bytes of the grouped-dispatch buffers at per-expert capacity
+    ``C = b_e``: the (E, C, D) token buffer, its (E, C, D) output, and the
+    (E, C, F) gate/up intermediates of the grouped FFN (Eq. 3's S_IS term
+    for the expert module)."""
+    if not cfg.has_moe:
+        return 0.0
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.moe_d_ff
+    return e * capacity * (2 * d + 2 * f) * BYTES
+
+
 def dense_ffn_weight_bytes(cfg: ModelConfig) -> float:
     return 3 * cfg.d_model * cfg.d_ff * BYTES
 

@@ -21,6 +21,12 @@ def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def default_use_kernel() -> bool:
+    """Run the compiled Pallas kernels only on real TPU; everywhere else the
+    XLA einsum fallback is both faster and bit-stable."""
+    return jax.default_backend() == "tpu"
+
+
 def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
     n = x.shape[axis]
     pad = (-n) % mult
@@ -56,6 +62,27 @@ def expert_ffn(x, wg, wu, wd, interpret=None):
     wdp = _pad_to(wd, 1, 128)
     y = _eg.expert_ffn(xp, wgp, wup, wdp, interpret=interpret)
     return y[:, :C, :]
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def grouped_expert_ffn(x, wg, wu, wd, use_kernel=None):
+    """Backend-dispatched grouped expert FFN over (E, C, D) capacity buffers.
+
+    One launch covers every expert: the fused Pallas kernel on real TPU, an
+    einsum-based XLA path elsewhere.  The fallback uses the same op sequence
+    as a per-expert ``x @ w`` chain (bf16 intermediates), so it is
+    bit-compatible with the engine's sequential-loop oracle; the Pallas
+    kernel keeps an f32 VMEM accumulator and agrees to bf16 rounding
+    (tests/test_kernels.py).
+    """
+    use_kernel = default_use_kernel() if use_kernel is None else use_kernel
+    if use_kernel:
+        # interpret=None: compiled on TPU, interpret mode if the kernel is
+        # forced on a backend Pallas cannot compile for
+        return expert_ffn(x, wg, wu, wd, interpret=None)
+    g = jnp.einsum("ecd,edf->ecf", x, wg)
+    u = jnp.einsum("ecd,edf->ecf", x, wu)
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, wd)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

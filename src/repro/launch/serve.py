@@ -27,6 +27,9 @@ def main() -> None:
     ap.add_argument("--decode-len", type=int, default=16)
     ap.add_argument("--batch", type=int, default=8,
                     help="accumulated batch B for the smoke execution")
+    ap.add_argument("--expert-path", default="grouped",
+                    choices=("grouped", "loop"),
+                    help="MoE stage: grouped dispatch vs per-expert loop")
     args = ap.parse_args()
 
     hw = PROFILES[args.profile]
@@ -45,12 +48,16 @@ def main() -> None:
     plan = Plan(
         B=args.batch,
         b_a=max(1, min(res.plan.b_a, args.batch)),
-        b_e=min(res.plan.b_e, 128),
+        # b_e is a per-expert capacity; the engine clamps it to the
+        # accumulated batch, so the planned value carries over directly
+        b_e=res.plan.b_e,
         omega=res.plan.omega if cfg.has_attention else 0.0,
     )
-    report = serve_dataset(cfg, params, requests, plan, args.decode_len)
+    report = serve_dataset(cfg, params, requests, plan, args.decode_len,
+                           expert_path=args.expert_path)
     print(f"served {args.requests} requests in {report.total_s:.2f}s "
-          f"({report.decode_throughput:.1f} decode tok/s on this host)")
+          f"({report.decode_throughput:.1f} decode tok/s on this host, "
+          f"{report.expert_tokens_dropped} routed copies dropped)")
 
 
 if __name__ == "__main__":

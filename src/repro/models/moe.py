@@ -20,7 +20,7 @@ paper bounds ``b_e`` to prevent OOM.
 from __future__ import annotations
 
 import functools
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +28,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.models.layers import dense_init
-from repro.sharding.specs import ShardCtx
+from repro.sharding.specs import ShardCtx, shard_map
 
 
 # ---------------------------------------------------------------------------
@@ -72,6 +72,90 @@ def expert_ffn(wg, wu, wd, h):
 
 
 # ---------------------------------------------------------------------------
+# Grouped dispatch: capacity-bucketed gather -> one launch -> scatter-add
+# ---------------------------------------------------------------------------
+def _arrival_slots(ids: jax.Array, n_buckets: int, mask=None) -> jax.Array:
+    """Slot of each routed copy within its bucket, in arrival order — the
+    cumsum-of-one-hot core shared by every capacity-dispatch path (grouped,
+    sharded psum, all-to-all).  Entries with ``mask=False`` consume no slot."""
+    onehot = jax.nn.one_hot(ids, n_buckets, dtype=jnp.int32)
+    if mask is not None:
+        onehot = onehot * mask[:, None].astype(jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - onehot
+    return jnp.take_along_axis(pos, ids[:, None], axis=1)[:, 0]
+
+
+def grouped_dispatch(
+    cfg: ModelConfig,
+    xt: jax.Array,          # (T, D) tokens
+    gates: jax.Array,       # (T, k)
+    idx: jax.Array,         # (T, k) expert ids
+    wg, wu, wd,             # (E, ·, ·) expert weights
+    capacity: int,
+    use_kernel=None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """The engine's expert module (paper §4.2), fully on device.
+
+    Routed token copies are gathered into an ``(E, C, D)`` capacity buffer,
+    pushed through ONE grouped FFN launch (``kernels.ops.grouped_expert_ffn``:
+    Pallas on TPU, XLA einsum elsewhere), and scatter-added back weighted by
+    their gates.  ``capacity`` is the per-expert token budget ``b_e``; routed
+    copies beyond it are dropped (zero contribution), which the caller
+    accounts for.  Returns ``(y, kept, dropped)`` with ``kept``/``dropped``
+    device scalars — no host sync happens here.
+    """
+    from repro.kernels import ops as kernel_ops
+
+    T, D = xt.shape
+    E = cfg.num_experts
+    k = cfg.experts_per_token
+    flat_idx = idx.reshape(-1)                              # (T*k,)
+    flat_gate = gates.reshape(-1)
+    slot = _arrival_slots(flat_idx, E)
+    keep = slot < capacity
+    slot_c = jnp.minimum(slot, capacity - 1)
+    tok = jnp.arange(T * k) // k
+    buf = jnp.zeros((E, capacity, D), xt.dtype)
+    buf = buf.at[flat_idx, slot_c].add(
+        xt[tok] * keep[:, None].astype(xt.dtype)
+    )
+    out = kernel_ops.grouped_expert_ffn(buf, wg, wu, wd, use_kernel=use_kernel)
+    back = out[flat_idx, slot_c]                            # (T*k, D)
+    back = back * (keep[:, None] * flat_gate[:, None]).astype(back.dtype)
+    y = jnp.zeros((T, D), xt.dtype).at[tok].add(back.astype(xt.dtype))
+    kept = jnp.sum(keep.astype(jnp.int32))
+    return y, kept, jnp.int32(T * k) - kept
+
+
+def moe_apply_grouped(
+    cfg: ModelConfig,
+    p: Dict[str, jax.Array],
+    x: jax.Array,
+    capacity: Optional[int] = None,
+    use_kernel=None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Grouped-dispatch MoE forward — the same implementation the engine's
+    decode step uses, reachable from the reference forward via
+    ``ShardCtx(moe_dispatch='grouped')`` so prefill and decode share one
+    expert path.  ``capacity`` defaults to the planner-style
+    ``moe_capacity`` bound (``capacity_factor`` headroom over the balanced
+    load), so routed copies beyond it are dropped under imbalance; the
+    kept/dropped counters are NOT surfaced here — callers needing drop
+    accounting (the engine's decode stage) call ``grouped_dispatch``
+    directly.  See ROADMAP "Grouped prefill by default"."""
+    B, S, D = x.shape
+    xt = x.reshape(-1, D)
+    gates, idx, probs = route(cfg, p["router"], xt)
+    cap = capacity if capacity is not None else moe_capacity(cfg, xt.shape[0])
+    y, _, _ = grouped_dispatch(
+        cfg, xt, gates, idx,
+        p["experts_w_gate"], p["experts_w_up"], p["experts_w_down"],
+        cap, use_kernel=use_kernel,
+    )
+    return y.reshape(B, S, D).astype(x.dtype), load_balance_loss(cfg, probs, idx)
+
+
+# ---------------------------------------------------------------------------
 # Exact local reference
 # ---------------------------------------------------------------------------
 def moe_apply_local(
@@ -112,17 +196,16 @@ def _dispatch_combine(
     local_e = flat_idx - e_lo
     mine = (local_e >= 0) & (local_e < e_loc_n)
     local_e_c = jnp.clip(local_e, 0, e_loc_n - 1)
-    onehot = jax.nn.one_hot(local_e_c, e_loc_n, dtype=jnp.int32)
-    onehot = onehot * mine[:, None].astype(jnp.int32)
-    pos = jnp.cumsum(onehot, axis=0) - onehot               # (T*k, E_loc)
-    slot = jnp.take_along_axis(pos, local_e_c[:, None], axis=1)[:, 0]
+    slot = _arrival_slots(local_e_c, e_loc_n, mask=mine)
     keep = mine & (slot < capacity)
     slot_c = jnp.minimum(slot, capacity - 1)
     tok = jnp.arange(T * k) // k
     buf = jnp.zeros((e_loc_n, capacity, D), xt.dtype)
     contrib = xt[tok] * keep[:, None].astype(xt.dtype)
     buf = buf.at[local_e_c, slot_c].add(contrib)
-    out_buf = expert_ffn(wg, wu, wd, buf)                   # (E_loc, C, D)
+    from repro.kernels import ops as kernel_ops
+
+    out_buf = kernel_ops.grouped_expert_ffn(buf, wg, wu, wd)  # (E_loc, C, D)
     back = out_buf[local_e_c, slot_c]                       # (T*k, D)
     back = back * (keep[:, None] * flat_gate[:, None]).astype(back.dtype)
     y = jnp.zeros((T, D), xt.dtype).at[tok].add(back.astype(xt.dtype))
@@ -230,7 +313,7 @@ def moe_apply_sharded(
             aux = jax.lax.pmean(aux, ctx.batch_axes)
         return y.reshape(Bl, Sl, D), aux
 
-    y, aux = jax.shard_map(
+    y, aux = shard_map(
         body,
         mesh=ctx.mesh,
         in_specs=(
@@ -285,9 +368,7 @@ def moe_apply_a2a(
         flat_idx = idx.reshape(-1)                   # (T_r*k,)
         dst = flat_idx // e_loc_n                    # destination rank
         # slot within my send-buffer page for rank `dst`
-        onehot = jax.nn.one_hot(dst, n_model, dtype=jnp.int32)
-        pos = jnp.cumsum(onehot, axis=0) - onehot
-        slot = jnp.take_along_axis(pos, dst[:, None], axis=1)[:, 0]
+        slot = _arrival_slots(dst, n_model)
         cap = max(8, -(-int(T_r * k * cfg.capacity_factor) // n_model // 8) * 8)
         keep = slot < cap
         slot_c = jnp.minimum(slot, cap - 1)
@@ -308,10 +389,7 @@ def moe_apply_a2a(
         le = meta_r.reshape(-1)                      # 0 = empty
         valid = le > 0
         le0 = jnp.maximum(le - 1, 0)
-        oh = jax.nn.one_hot(le0, e_loc_n, dtype=jnp.int32)
-        oh = oh * valid[:, None].astype(jnp.int32)
-        pos2 = jnp.cumsum(oh, axis=0) - oh
-        slot2 = jnp.take_along_axis(pos2, le0[:, None], axis=1)[:, 0]
+        slot2 = _arrival_slots(le0, e_loc_n, mask=valid)
         cap2 = max(8, -(-n_model * cap // e_loc_n // 8) * 8)
         keep2 = valid & (slot2 < cap2)
         slot2_c = jnp.minimum(slot2, cap2 - 1)
@@ -335,7 +413,7 @@ def moe_apply_a2a(
         return y.reshape(Bl, Sl, D), aux
 
     x_spec = ctx.spec("batch", "model", None, shape=x.shape)
-    y, aux = jax.shard_map(
+    y, aux = shard_map(
         body,
         mesh=ctx.mesh,
         in_specs=(
@@ -352,8 +430,16 @@ def moe_apply_a2a(
 
 
 def moe_apply(cfg: ModelConfig, p, x, ctx: ShardCtx = ShardCtx()):
+    dispatch = getattr(ctx, "moe_dispatch", "psum")
     if ctx.mesh is not None and ctx.model_axis is not None:
-        if getattr(ctx, "moe_dispatch", "psum") == "a2a":
+        if dispatch == "grouped":
+            raise ValueError(
+                "moe_dispatch='grouped' is the single-device capacity path; "
+                "use 'psum' or 'a2a' on a mesh with a model axis"
+            )
+        if dispatch == "a2a":
             return moe_apply_a2a(cfg, p, x, ctx)
         return moe_apply_sharded(cfg, p, x, ctx)
+    if dispatch == "grouped":
+        return moe_apply_grouped(cfg, p, x)
     return moe_apply_local(cfg, p, x)

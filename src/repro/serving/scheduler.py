@@ -30,6 +30,7 @@ class BatchResult:
     tokens: np.ndarray            # (B, decode_len)
     prefill_s: float
     decode_s: float
+    expert_tokens_dropped: int = 0   # routed copies over the b_e capacity
 
 
 @dataclass
@@ -43,6 +44,10 @@ class ServeReport:
     @property
     def decode_tokens(self) -> int:
         return sum(r.tokens.size for r in self.results)
+
+    @property
+    def expert_tokens_dropped(self) -> int:
+        return sum(r.expert_tokens_dropped for r in self.results)
 
     @property
     def decode_throughput(self) -> float:
@@ -67,7 +72,15 @@ def serve_dataset(
     plan: Plan,
     decode_len: int,
     max_seq: Optional[int] = None,
+    expert_path: str = "grouped",
 ) -> ServeReport:
+    """Serve ``requests`` in accumulated batches of ``plan.B``.
+
+    ``expert_path`` selects the engine's MoE stage ('grouped' = one
+    on-device dispatch per MoE layer, 'loop' = the sequential per-expert
+    oracle) so the loop-vs-grouped speedup is directly measurable from the
+    report's timings.
+    """
     report = ServeReport()
     B = max(1, plan.B)
     for lo in range(0, len(requests), B):
@@ -76,6 +89,7 @@ def serve_dataset(
         engine = ModuleBatchingEngine(
             cfg, params, plan,
             max_seq=max_seq or prompts.shape[1] + decode_len,
+            expert_path=expert_path,
         )
         t0 = time.perf_counter()
         logits = engine.prefill(jnp.asarray(prompts))
@@ -86,7 +100,9 @@ def serve_dataset(
             lg = engine.decode_step(jnp.asarray(toks[-1]), prompts.shape[1] + t)
             toks.append(np.asarray(jnp.argmax(lg, axis=-1)))
         t2 = time.perf_counter()
+        stats = engine.sync_stats()      # fold device-side drop counters in
         report.results.append(
-            BatchResult(np.stack(toks, 1), t1 - t0, t2 - t1)
+            BatchResult(np.stack(toks, 1), t1 - t0, t2 - t1,
+                        stats.expert_tokens_dropped)
         )
     return report

@@ -29,7 +29,7 @@ def test_engine_logits_match_reference(arch):
     lg_ref, caches = M.prefill(cfg, params, toks)
     cache = cache_from_prefill(cfg, caches, S, max_seq=S + DEC)
     eng = ModuleBatchingEngine(
-        cfg, params, Plan(B=B, b_a=2, b_e=4, omega=0.0), max_seq=S + DEC
+        cfg, params, Plan(B=B, b_a=2, b_e=B, omega=0.0), max_seq=S + DEC
     )
     lg_eng = eng.prefill(toks)
     scale = float(jnp.max(jnp.abs(lg_ref.astype(jnp.float32)))) + 1e-6
@@ -68,15 +68,20 @@ def test_engine_host_attention_path():
 
 def test_engine_microbatch_counts():
     cfg, params, toks = _setup("mixtral-8x7b")
-    plan = Plan(B=B, b_a=2, b_e=3, omega=0.5)
+    plan = Plan(B=B, b_a=2, b_e=B, omega=0.5)   # capacity B: no drops
     eng = ModuleBatchingEngine(cfg, params, plan, max_seq=S + DEC)
     eng.prefill(toks)
     eng.stats.attn_microbatches = 0
     eng.decode_step(toks[:, 0], S)
     n_attn_layers = sum(1 for k, _, _ in eng.layers if k == "attn")
     assert eng.stats.attn_microbatches == n_attn_layers * -(-B // 2)
-    # every routed token was processed by some expert launch
-    assert eng.stats.expert_tokens >= B  # at least top-1 worth per token
+    # grouped dispatch: exactly ONE expert launch per MoE layer per step,
+    # and every routed token-copy was processed (no capacity drops)
+    n_moe_layers = sum(1 for _, f, _ in eng.layers if f == "moe")
+    assert eng.stats.expert_launches == n_moe_layers
+    eng.sync_stats()
+    assert eng.stats.expert_tokens == n_moe_layers * B * cfg.experts_per_token
+    assert eng.stats.expert_tokens_dropped == 0
 
 
 def test_engine_generation_runs_all_archs():

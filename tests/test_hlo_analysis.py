@@ -62,7 +62,8 @@ def test_real_module_collectives():
     def f(a):
         return jax.lax.psum(a, "x")
 
-    g = jax.shard_map(f, mesh=mesh, in_specs=P("x"), out_specs=P(),
+    from repro.sharding.specs import shard_map
+    g = shard_map(f, mesh=mesh, in_specs=P("x"), out_specs=P(),
                       check_vma=False)
     txt = jax.jit(g).lower(jnp.ones((8,))).compile().as_text()
     stats = collective_stats(txt)
