@@ -60,4 +60,34 @@ def engine_walltime() -> Table:
     return t
 
 
-ALL = [engine_walltime]
+def scheduler_modes() -> Table:
+    """Static vs continuous scheduling on a mixed-decode_len workload.
+
+    The workload the continuous scheduler exists for: decode lengths drawn
+    from {8, 32, 128} (short chats to long generations).  The static
+    scheduler decodes every batch to its longest member; the continuous
+    scheduler recycles finished slots, so it executes strictly fewer
+    decode-step*slot units for the same tokens (occupancy -> 1).
+    """
+    from repro.data.datasets import DatasetSpec, synthetic_requests
+    from repro.serving.scheduler import serve_dataset
+
+    t = Table("scheduler_modes",
+              ["scheduler", "total_s", "decode_tok_per_s", "slot_steps",
+               "occupancy%", "mean_latency_s"])
+    cfg = get_config("mixtral-8x7b", smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    reqs = synthetic_requests(
+        DatasetSpec("mixed", 8, 24, 32), cfg.vocab_size,
+        prompt_lens=[24, 12, 17], decode_lens=[8, 32, 128],
+    )
+    plan = Plan(B=4, b_a=4, b_e=64, omega=0.0)
+    for mode in ("static", "continuous"):
+        rep = serve_dataset(cfg, params, reqs, plan, 32, scheduler=mode)
+        t.add(mode, fmt(rep.total_s, 2), fmt(rep.decode_throughput),
+              str(rep.decode_slot_steps), fmt(100 * rep.occupancy),
+              fmt(rep.mean_latency_s, 2))
+    return t
+
+
+ALL = [engine_walltime, scheduler_modes]

@@ -79,15 +79,19 @@ def _attn_decode_host_module(cfg, p, x_mb, k, v, pos):
     B = x_mb.shape[0]
     h = rms_norm(x_mb[:, None, :], p["norm1"], cfg.norm_eps)
     q, k_new, v_new = attn_mod._project_qkv(cfg, p["attn"], h)
-    posb = jnp.full((B, 1), pos)
+    posv = jnp.broadcast_to(
+        jnp.atleast_1d(jnp.asarray(pos, jnp.int32)), (B,)
+    )                                                       # (B,) ragged-safe
+    posb = posv[:, None]
     q = apply_rope(q, posb, cfg.rope_theta)
     k_new = apply_rope(k_new, posb, cfg.rope_theta)
     span = k.shape[1]
-    slot = jnp.where(cfg.sliding_window > 0, pos % span,
-                     jnp.minimum(pos, span - 1))
-    ck = jax.lax.dynamic_update_slice(k, k_new, (0, slot, 0, 0))
-    cv = jax.lax.dynamic_update_slice(v, v_new, (0, slot, 0, 0))
-    out = host_decode_attention(q[:, 0], ck, cv, pos)       # (B, H, D) f32
+    slot = jnp.where(cfg.sliding_window > 0, posv % span,
+                     jnp.minimum(posv, span - 1))
+    rows = jnp.arange(B)
+    ck = k.at[rows, slot].set(k_new[:, 0])
+    cv = v.at[rows, slot].set(v_new[:, 0])
+    out = host_decode_attention(q[:, 0], ck, cv, posv)      # (B, H, D) f32
     o = out.reshape(B, 1, cfg.num_heads * cfg.head_dim).astype(x_mb.dtype)
     y = o @ p["attn"]["wo"]
     return y[:, 0], ck, cv
@@ -178,8 +182,9 @@ class ModuleBatchingEngine:
     ``grouped_prefill=True`` additionally routes prefill's MoE stage through
     the same grouped implementation (``ShardCtx(moe_dispatch='grouped')``),
     so both phases share one expert path.  Caveat: prefill capacity comes
-    from ``cfg.capacity_factor`` (not ``plan.b_e``) and prefill drops are
-    not counted in ``EngineStats`` — opt-in until tuned (see ROADMAP).
+    from ``cfg.capacity_factor`` (not ``plan.b_e``), prefill drops are not
+    counted in ``EngineStats``, and a ragged batch's pad tokens route too
+    (consuming capacity) — opt-in until tuned (see ROADMAP).
     """
 
     def __init__(
@@ -228,17 +233,38 @@ class ModuleBatchingEngine:
             self.cache.append(init_layer_cache(self.cfg, kind, batch, self.max_seq))
 
     # -- phases ---------------------------------------------------------
-    def prefill(self, tokens: jax.Array, frontend_emb=None) -> jax.Array:
+    def prefill(self, tokens: jax.Array, frontend_emb=None, lengths=None) -> jax.Array:
         """Prefill via the reference forward (attention micro-batched by
-        b_a sequences), filling the engine cache.  Returns last logits."""
-        cfg, plan = self.cfg, self.plan
+        b_a sequences), filling the engine cache.  Returns last logits.
+
+        ``lengths`` (B,) makes a ragged right-padded batch exact: pads are
+        masked out of attention/SSM state and each sequence's logits come
+        from its true last token (see ``model.forward``).
+        """
         B, S = tokens.shape
+        self.init_cache(B)
+        return self.prefill_slots(
+            tokens, np.arange(B), lengths=lengths, frontend_emb=frontend_emb
+        )
+
+    def prefill_slots(
+        self, tokens: jax.Array, rows, lengths=None, frontend_emb=None
+    ) -> jax.Array:
+        """Prefill ``tokens`` (n, S) into existing batch rows ``rows`` (n,).
+
+        The continuous scheduler's admission path: newcomers are prefilled
+        into the slots freed by finished sequences, overwriting those rows'
+        KV-cache and SSM state (``serving.kvcache.scatter_prefill_rows``)
+        while every other slot's state is untouched.  Returns the
+        newcomers' last-token logits (n, V).
+        """
+        cfg, plan = self.cfg, self.plan
+        assert self.cache is not None, "init_cache/prefill before prefill_slots"
+        n, S = tokens.shape
         assert S <= self.max_seq
         if cfg.sliding_window:
             assert S <= cfg.sliding_window, "engine prefill requires prompt <= window"
-        self.init_cache(B)
-        logits_parts = []
-        b_a = max(1, min(plan.b_a, B))
+        from repro.serving.kvcache import scatter_prefill_rows
         from repro.sharding.specs import ShardCtx
 
         sctx = (
@@ -246,45 +272,31 @@ class ModuleBatchingEngine:
             if (self.grouped_prefill and self.expert_path == "grouped")
             else ShardCtx()
         )
-        for lo in range(0, B, b_a):
-            hi = min(B, lo + b_a)
+        rows = np.asarray(rows)
+        lengths = None if lengths is None else jnp.asarray(lengths, jnp.int32)
+        logits_parts = []
+        b_a = max(1, min(plan.b_a, n))
+        for lo in range(0, n, b_a):
+            hi = min(n, lo + b_a)
             mb = tokens[lo:hi]
             fe = None if frontend_emb is None else frontend_emb[lo:hi]
-            lg, caches = model_mod.prefill(cfg, self.params, mb, fe, sctx)
+            ln = None if lengths is None else lengths[lo:hi]
+            lg, caches = model_mod.prefill(cfg, self.params, mb, fe, sctx, ln)
             logits_parts.append(lg[:, 0])
-            self._absorb_prefill_cache(lo, hi, S, caches)
+            scatter_prefill_rows(cfg, self.cache, caches, rows[lo:hi])
             self.stats.attn_microbatches += 1
         return jnp.concatenate(logits_parts, axis=0)
 
-    def _absorb_prefill_cache(self, lo, hi, S, caches) -> None:
-        """Scatter micro-batch prefill caches into the engine's buffers."""
-        pattern = model_mod.layer_pattern(self.cfg)
-        G = model_mod.num_groups(self.cfg)
-        for g in range(G):
-            for j, (kind, _) in enumerate(pattern):
-                li = g * len(pattern) + j
-                slot = jax.tree.map(lambda a: a[g], caches[j])
-                if kind == "attn":
-                    span = self.cache[li]["k"].shape[1]
-                    k, v = slot["k"], slot["v"]          # (mb, S, K, hd)
-                    n = min(S, span)
-                    self.cache[li]["k"] = (
-                        self.cache[li]["k"].at[lo:hi, :n].set(k[:, -n:])
-                    )
-                    self.cache[li]["v"] = (
-                        self.cache[li]["v"].at[lo:hi, :n].set(v[:, -n:])
-                    )
-                else:
-                    for key in ("h", "conv"):
-                        self.cache[li][key] = (
-                            self.cache[li][key].at[lo:hi].set(slot[key])
-                        )
-
     def decode_step(self, tokens: jax.Array, pos) -> jax.Array:
-        """One module-batched decode step for all B sequences."""
+        """One module-batched decode step for all B sequences.
+
+        ``pos`` is the write/attend position: a scalar for uniform batches,
+        or a per-sequence (B,) vector for ragged batches and the continuous
+        scheduler (each slot decodes at its own sequence position).
+        """
         cfg, plan = self.cfg, self.plan
         B = tokens.shape[0]
-        pos = jnp.int32(pos)
+        pos = jnp.asarray(pos, jnp.int32)
         x = _embed_module(cfg, self.params["embed"], tokens)
         for li, (kind, ffn, p) in enumerate(self.layers):
             if kind == "attn":
@@ -301,20 +313,30 @@ class ModuleBatchingEngine:
 
     # -- module stages ---------------------------------------------------
     def _attention_stage(self, li, p, x, pos) -> jax.Array:
-        """Micro-batched attention with the ω host/device split."""
+        """Micro-batched attention with the ω host/device split.
+
+        The first ``round(ω·B)`` sequences take the host path.  A micro-batch
+        straddling that boundary is split at it, so the realized host
+        fraction is exactly ``round(ω·B)/B`` instead of silently rounding a
+        whole micro-batch onto the device path.
+        """
         cfg, plan = self.cfg, self.plan
         B = x.shape[0]
         n_host = int(round(plan.omega * B))
         outs = []
         b_a = max(1, min(plan.b_a, B))
         k, v = self.cache[li]["k"], self.cache[li]["v"]
-        for lo in range(0, B, b_a):
+        lo = 0
+        while lo < B:
             hi = min(B, lo + b_a)
+            if lo < n_host < hi:
+                hi = n_host                    # split the straddling batch
             fn = (
                 _attn_decode_host_module if hi <= n_host
                 else _attn_decode_module
             )
-            y, ck, cv = fn(cfg, p, x[lo:hi], k[lo:hi], v[lo:hi], pos)
+            mb_pos = pos if pos.ndim == 0 else pos[lo:hi]
+            y, ck, cv = fn(cfg, p, x[lo:hi], k[lo:hi], v[lo:hi], mb_pos)
             k = k.at[lo:hi].set(ck)
             v = v.at[lo:hi].set(cv)
             outs.append(y)
@@ -323,6 +345,7 @@ class ModuleBatchingEngine:
                 self.stats.host_attn_tokens += hi - lo
             else:
                 self.stats.device_attn_tokens += hi - lo
+            lo = hi
         self.cache[li]["k"], self.cache[li]["v"] = k, v
         return jnp.concatenate(outs, axis=0)
 
@@ -377,14 +400,21 @@ class ModuleBatchingEngine:
 
     # -- generation -------------------------------------------------------
     def generate(
-        self, tokens: jax.Array, decode_len: int, frontend_emb=None
+        self, tokens: jax.Array, decode_len: int, frontend_emb=None,
+        lengths=None,
     ) -> jax.Array:
-        """Greedy generation (the paper's decoding strategy, §B)."""
+        """Greedy generation (the paper's decoding strategy, §B).
+
+        ``lengths`` (B,) generates from a ragged right-padded batch: each
+        sequence decodes at its own positions, token-for-token identical to
+        generating it alone unpadded.
+        """
         B, S = tokens.shape
-        logits = self.prefill(tokens, frontend_emb)
+        logits = self.prefill(tokens, frontend_emb, lengths=lengths)
         out = [jnp.argmax(logits, axis=-1)]
+        base = S if lengths is None else jnp.asarray(lengths, jnp.int32)
         for t in range(decode_len - 1):
-            logits = self.decode_step(out[-1], S + t)
+            logits = self.decode_step(out[-1], base + t)
             out.append(jnp.argmax(logits, axis=-1))
         result = jnp.stack(out, axis=1)              # (B, decode_len)
         self.sync_stats()                            # fold device counters in

@@ -23,9 +23,13 @@ def host_decode_attention(
     q: jax.Array,        # (B, H, D)    bf16 or f32
     k_cache: jax.Array,  # (B, S, K, D)
     v_cache: jax.Array,  # (B, S, K, D)
-    pos,                 # scalar int: current position (attend to <= pos)
+    pos,                 # scalar or (B,) int: current position (attend <= pos)
 ) -> jax.Array:
-    """Decode-step GQA with the paper's BF16-consistent FP32 arithmetic."""
+    """Decode-step GQA with the paper's BF16-consistent FP32 arithmetic.
+
+    ``pos`` may be per-sequence (ragged batches): each row attends its own
+    ``<= pos`` prefix of the cache.
+    """
     B, H, D = q.shape
     K = k_cache.shape[2]
     G = H // K
@@ -34,8 +38,9 @@ def host_decode_attention(
     vf = round_bf16(v_cache.astype(jnp.float32))
     scores = jnp.einsum("bkgd,bskd->bkgs", qf, kf) * (D ** -0.5)
     scores = round_bf16(scores)                       # §B: round after dot
-    valid = jnp.arange(k_cache.shape[1]) <= pos
-    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    posv = jnp.atleast_1d(jnp.asarray(pos, jnp.int32))      # (1,) or (B,)
+    valid = jnp.arange(k_cache.shape[1])[None, :] <= posv[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", round_bf16(probs), vf)
     return round_bf16(out).reshape(B, H, D)

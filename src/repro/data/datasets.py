@@ -9,7 +9,7 @@ content-agnostic).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Iterator, List, Tuple
+from typing import Iterator, List, Sequence, Tuple
 
 import numpy as np
 
@@ -36,18 +36,37 @@ DATASETS = {
 
 
 def synthetic_requests(
-    spec: DatasetSpec, vocab_size: int, limit: int | None = None, seed: int = 0
+    spec: DatasetSpec,
+    vocab_size: int,
+    limit: int | None = None,
+    seed: int = 0,
+    prompt_lens: Sequence[int] | None = None,
+    decode_lens: Sequence[int] | None = None,
 ) -> List["Request"]:
+    """Deterministic synthetic requests shaped like ``spec``.
+
+    ``prompt_lens`` / ``decode_lens`` override the spec's uniform lengths
+    with a cycled mixed-length workload (ragged prompts / in-flight decode
+    lengths) — the shape the continuous scheduler exists for.
+    """
     from repro.serving.scheduler import Request
 
     rng = np.random.default_rng(seed)
     n = min(spec.num_sequences, limit or spec.num_sequences)
     return [
         Request(
-            prompt=rng.integers(0, vocab_size, spec.prompt_len, dtype=np.int32),
-            decode_len=spec.decode_len,
+            prompt=rng.integers(
+                0, vocab_size,
+                prompt_lens[i % len(prompt_lens)] if prompt_lens
+                else spec.prompt_len,
+                dtype=np.int32,
+            ),
+            decode_len=(
+                decode_lens[i % len(decode_lens)] if decode_lens
+                else spec.decode_len
+            ),
         )
-        for _ in range(n)
+        for i in range(n)
     ]
 
 

@@ -30,6 +30,18 @@ def main() -> None:
     ap.add_argument("--expert-path", default="grouped",
                     choices=("grouped", "loop"),
                     help="MoE stage: grouped dispatch vs per-expert loop")
+    ap.add_argument("--scheduler", default="static",
+                    choices=("static", "continuous"),
+                    help="static accumulated batches vs continuous in-flight "
+                         "batching (finished slots recycled mid-batch)")
+    ap.add_argument("--prompt-lens", default=None,
+                    help="comma-separated prompt lengths cycled over "
+                         "requests (ragged workload), e.g. 16,32,24")
+    ap.add_argument("--decode-lens", default=None,
+                    help="comma-separated per-request decode lengths cycled "
+                         "over requests, e.g. 8,32,128")
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="token id that finishes a sequence early")
     args = ap.parse_args()
 
     hw = PROFILES[args.profile]
@@ -44,7 +56,12 @@ def main() -> None:
     cfg = get_config(args.arch, smoke=True)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     spec = DatasetSpec("serve", args.requests, args.prompt_len, args.decode_len)
-    requests = synthetic_requests(spec, cfg.vocab_size)
+    parse = lambda s: [int(x) for x in s.split(",")] if s else None
+    requests = synthetic_requests(
+        spec, cfg.vocab_size,
+        prompt_lens=parse(args.prompt_lens),
+        decode_lens=parse(args.decode_lens),
+    )
     plan = Plan(
         B=args.batch,
         b_a=max(1, min(res.plan.b_a, args.batch)),
@@ -54,10 +71,15 @@ def main() -> None:
         omega=res.plan.omega if cfg.has_attention else 0.0,
     )
     report = serve_dataset(cfg, params, requests, plan, args.decode_len,
-                           expert_path=args.expert_path)
+                           expert_path=args.expert_path,
+                           scheduler=args.scheduler, eos_id=args.eos_id)
     print(f"served {args.requests} requests in {report.total_s:.2f}s "
           f"({report.decode_throughput:.1f} decode tok/s on this host, "
           f"{report.expert_tokens_dropped} routed copies dropped)")
+    print(f"[{report.scheduler}] decode slot-steps: {report.decode_slot_steps} "
+          f"(wasted {report.wasted_slot_steps}, "
+          f"occupancy {report.occupancy:.0%}); "
+          f"mean request latency {report.mean_latency_s:.2f}s")
 
 
 if __name__ == "__main__":

@@ -81,8 +81,13 @@ def naive_attention(
     causal: bool = True,
     window: int = 0,
     q_offset: int = 0,
+    kv_mask: Optional[jax.Array] = None,
 ) -> jax.Array:
-    """Reference attention.  q: (B, Sq, H, D); k, v: (B, Sk, K, D)."""
+    """Reference attention.  q: (B, Sq, H, D); k, v: (B, Sk, K, D).
+
+    ``kv_mask`` (B, Sk) bool marks valid keys; padded positions of a ragged
+    batch are masked out of every query's context.
+    """
     B, Sq, H, D = q.shape
     K = k.shape[2]
     G = H // K
@@ -97,6 +102,8 @@ def naive_attention(
     if window:
         mask &= qpos[:, None] - kpos[None, :] < window
     scores = jnp.where(mask, scores, NEG_INF)
+    if kv_mask is not None:
+        scores = jnp.where(kv_mask[:, None, None, None, :], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v)
     return out.reshape(B, Sq, H, D)
@@ -111,18 +118,21 @@ def blocked_attention(
     window: int = 0,
     q_block: int = 512,
     kv_block: int = 512,
+    kv_mask: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Flash-style attention: online softmax over KV blocks.
 
     Memory is O(S * kv_block) instead of O(S^2).  All KV blocks are computed
     and masked (the Pallas kernel skips fully-masked blocks on TPU; see
-    kernels/flash_attention).
+    kernels/flash_attention).  ``kv_mask`` (B, Sk) masks padded keys of a
+    ragged batch.
     """
     B, S, H, D = q.shape
     K = k.shape[2]
     G = H // K
     if S % q_block or S % kv_block:
-        return naive_attention(q, k, v, causal=causal, window=window)
+        return naive_attention(q, k, v, causal=causal, window=window,
+                               kv_mask=kv_mask)
     scale = D ** -0.5
     nq, nk = S // q_block, S // kv_block
     qb = q.reshape(B, nq, q_block, K, G, D)
@@ -146,6 +156,10 @@ def blocked_attention(
         if window:
             mask &= qpos[..., None] - kpos[None, None, :] < window
         s = jnp.where(mask[:, None, None, :, :][None], s, NEG_INF)
+        if kv_mask is not None:
+            km = lax.dynamic_slice_in_dim(kv_mask, i * kv_block, kv_block,
+                                          axis=1)         # (B, kb)
+            s = jnp.where(km[:, None, None, None, None, :], s, NEG_INF)
         m_new = jnp.maximum(m, s.max(axis=-1))
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
@@ -170,17 +184,22 @@ def swa_attention(
     *,
     window: int,
     q_block: int = 512,
+    kv_mask: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Sliding-window attention computing only the window (sub-quadratic).
 
     Scans query blocks; each block attends to a static slice of
-    ``window + q_block`` keys ending at the block's last position.
+    ``window + q_block`` keys ending at the block's last position.  Ragged
+    batches (``kv_mask``) fall back to the materialized reference: padded
+    keys must be masked everywhere, and the paper's workloads pad the long
+    sliding-window prompts to a uniform length anyway.
     """
     B, S, H, D = q.shape
     K = k.shape[2]
     G = H // K
-    if S <= window + q_block or S % q_block:
-        return naive_attention(q, k, v, causal=True, window=window)
+    if kv_mask is not None or S <= window + q_block or S % q_block:
+        return naive_attention(q, k, v, causal=True, window=window,
+                               kv_mask=kv_mask)
     scale = D ** -0.5
     nq = S // q_block
     span = window + q_block
@@ -211,15 +230,18 @@ def swa_attention(
 
 
 def full_attention(
-    q: jax.Array, k: jax.Array, v: jax.Array, *, window: int = 0
+    q: jax.Array, k: jax.Array, v: jax.Array, *, window: int = 0,
+    kv_mask: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Dispatcher used by the model for full-sequence passes."""
     S = q.shape[1]
     if window and S > window:
-        return swa_attention(q, k, v, window=window)
+        return swa_attention(q, k, v, window=window, kv_mask=kv_mask)
     if S <= 1024:
-        return naive_attention(q, k, v, causal=True, window=window)
-    return blocked_attention(q, k, v, causal=True, window=window)
+        return naive_attention(q, k, v, causal=True, window=window,
+                               kv_mask=kv_mask)
+    return blocked_attention(q, k, v, causal=True, window=window,
+                             kv_mask=kv_mask)
 
 
 # ---------------------------------------------------------------------------
@@ -231,8 +253,15 @@ def attn_forward(
     x: jax.Array,
     ctx: ShardCtx = ShardCtx(),
     positions: Optional[jax.Array] = None,
+    lengths: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Full-sequence attention.  Returns (output, kv) so prefill can cache.
+
+    ``lengths`` (B,) marks the true length of each right-padded sequence:
+    keys at padded positions are masked out of every query's context, so a
+    ragged batch attends exactly what its unpadded sequences would.
+    (Outputs *at* padded query positions are garbage — callers must never
+    read them; the decode path masks them by per-sequence position.)
 
     Sharding: heads over the model axis when the head count divides it;
     otherwise *context parallelism* — queries shard over sequence, KV
@@ -258,7 +287,10 @@ def attn_forward(
         q = ctx.shard(q, "batch", "model", None, None)
         k = ctx.shard(k, "batch", None, None, None)
         v = ctx.shard(v, "batch", None, None, None)
-    out = full_attention(q, k, v, window=cfg.sliding_window)
+    kv_mask = None
+    if lengths is not None:
+        kv_mask = jnp.arange(S)[None, :] < lengths[:, None]
+    out = full_attention(q, k, v, window=cfg.sliding_window, kv_mask=kv_mask)
     out = out.reshape(B, S, cfg.num_heads * cfg.head_dim)
     y = out @ p["wo"]
     return ctx.shard_residual(y), {"k": k, "v": v}
@@ -278,30 +310,40 @@ def attn_decode(
     p: Dict[str, jax.Array],
     x: jax.Array,                       # (B, 1, D)
     cache: Dict[str, jax.Array],
-    pos: jax.Array,                     # scalar int32: current position
+    pos: jax.Array,                     # scalar or (B,) int32: current position
     ctx: ShardCtx = ShardCtx(),
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """One decode step against a pre-allocated (possibly circular) cache."""
+    """One decode step against a pre-allocated (possibly circular) cache.
+
+    ``pos`` may be a scalar (uniform batch) or a per-sequence ``(B,)``
+    vector (ragged batch / continuous scheduler): each sequence writes its
+    new KV at its own position and attends only its own ``<= pos`` prefix,
+    so padded or recycled cache rows beyond a sequence's length are never
+    attended.
+    """
     B = x.shape[0]
     K, hd = cfg.num_kv_heads, cfg.head_dim
     q, k, v = _project_qkv(cfg, p, x)                       # (B,1,·,hd)
-    posb = jnp.full((B, 1), pos)
+    posv = jnp.broadcast_to(
+        jnp.atleast_1d(jnp.asarray(pos, jnp.int32)), (B,)
+    )                                                       # (B,)
+    posb = posv[:, None]
     q = apply_rope(q, posb, cfg.rope_theta)
     k = apply_rope(k, posb, cfg.rope_theta)
     span = cache["k"].shape[1]
-    slot = jnp.where(cfg.sliding_window > 0, pos % span, jnp.minimum(pos, span - 1))
-    ck = lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
-    cv = lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    slot = jnp.where(
+        cfg.sliding_window > 0, posv % span, jnp.minimum(posv, span - 1)
+    )                                                       # (B,)
+    rows = jnp.arange(B)
+    ck = cache["k"].at[rows, slot].set(k[:, 0])
+    cv = cache["v"].at[rows, slot].set(v[:, 0])
 
     G = cfg.num_heads // K
     qg = q.reshape(B, 1, K, G, hd)
     s = _gqa_scores(qg, ck) * (hd ** -0.5)                  # (B,K,G,1,span)
     idx = jnp.arange(span)
-    if cfg.sliding_window:
-        valid = idx <= pos                                  # ring holds last W
-    else:
-        valid = idx <= pos
-    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    valid = idx[None, :] <= posb                            # ring holds last W
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
     pr = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgqs,bskd->bqkgd", pr.astype(cv.dtype), cv)
     o = o.reshape(B, 1, cfg.num_heads * hd)

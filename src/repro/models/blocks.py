@@ -64,14 +64,21 @@ def layer_forward(
     x: jax.Array,
     ctx: ShardCtx = ShardCtx(),
     positions: Optional[jax.Array] = None,
+    lengths: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict, jax.Array]:
-    """Full-sequence layer.  Returns (x, cache_entry, aux_loss)."""
+    """Full-sequence layer.  Returns (x, cache_entry, aux_loss).
+
+    ``lengths`` (B,) enables ragged (right-padded) batches: the sequence
+    mixers mask padded positions so valid positions and cached state are
+    exactly what the unpadded sequences would produce.
+    """
     aux = jnp.zeros((), jnp.float32)
     h = rms_norm(x, p["norm1"], cfg.norm_eps)
     if kind == "attn":
-        y, cache = attn_mod.attn_forward(cfg, p["attn"], h, ctx, positions)
+        y, cache = attn_mod.attn_forward(cfg, p["attn"], h, ctx, positions,
+                                         lengths)
     else:
-        y, cache = ssm_mod.ssm_forward(cfg, p["ssm"], h, ctx)
+        y, cache = ssm_mod.ssm_forward(cfg, p["ssm"], h, ctx, lengths)
     x = x + y
     if ffn_kind == "moe":
         h = rms_norm(x, p["norm2"], cfg.norm_eps)

@@ -100,19 +100,29 @@ def forward(
     remat: bool = False,
     logits_mode: str = "full",             # full | last | none
     remat_policy: str = "full",            # full | dots
+    lengths: Optional[jax.Array] = None,   # (B,) true lengths (ragged batch)
 ):
-    """Returns (logits, aux_loss) — logits (B,S,V), (B,1,V), or final hidden."""
+    """Returns (logits, aux_loss) — logits (B,S,V), (B,1,V), or final hidden.
+
+    ``lengths`` marks the true length of each right-padded sequence.  Padded
+    positions are masked out of attention and the SSM recurrence, and
+    ``logits_mode='last'`` gathers each sequence's logits at its OWN last
+    token instead of the batch's right edge (a pad position for every
+    shorter prompt).
+    """
     pattern = layer_pattern(cfg)
     B, S = tokens.shape
     x = _embed(cfg, params, tokens, frontend_emb, ctx)
     positions = jnp.arange(S)[None, :]
+    if lengths is not None:
+        lengths = jnp.asarray(lengths, jnp.int32)
 
     def body(carry, group_p):
         x, aux = carry
         caches = []
         for j, (kind, ffn) in enumerate(pattern):
             x, cache, a = layer_forward(
-                cfg, kind, ffn, group_p[j], x, ctx, positions
+                cfg, kind, ffn, group_p[j], x, ctx, positions, lengths
             )
             caches.append(cache)
             aux = aux + a
@@ -134,7 +144,11 @@ def forward(
     if logits_mode == "none":
         return x, aux, caches
     if logits_mode == "last":
-        return _logits(cfg, params, x[:, -1:], ctx), aux, caches
+        if lengths is not None:
+            last = x[jnp.arange(B), lengths - 1][:, None]
+        else:
+            last = x[:, -1:]
+        return _logits(cfg, params, last, ctx), aux, caches
     return _logits(cfg, params, x, ctx), aux, caches
 
 
@@ -191,16 +205,20 @@ def prefill(
     tokens: jax.Array,
     frontend_emb: Optional[jax.Array] = None,
     ctx: ShardCtx = ShardCtx(),
+    lengths: Optional[jax.Array] = None,
 ):
     """Returns (last-token logits (B,1,V), caches).
 
     Attention cache entries come back as the raw per-layer K/V of shape
     (G, B, S, K, hd) (rope already applied); SSM entries as the final
     recurrent state.  ``serving.kvcache`` converts these into decode-ready
-    buffers (padding / ring alignment).
+    buffers (padding / ring alignment).  ``lengths`` (B,) makes a ragged
+    (right-padded) batch exact: pads are masked and logits come from each
+    sequence's true last token.
     """
     logits, aux, caches = forward(
-        cfg, params, tokens, frontend_emb, ctx, logits_mode="last"
+        cfg, params, tokens, frontend_emb, ctx, logits_mode="last",
+        lengths=lengths,
     )
     return logits, caches
 

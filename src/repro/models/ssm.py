@@ -10,7 +10,7 @@ The chunk-local quadratic part is also implemented as a Pallas TPU kernel
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -139,8 +139,17 @@ def ssm_forward(
     p: Dict[str, jax.Array],
     x: jax.Array,
     ctx: ShardCtx = ShardCtx(),
+    lengths: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """Full-sequence Mamba2 block.  Returns (y, state) for prefill caching."""
+    """Full-sequence Mamba2 block.  Returns (y, state) for prefill caching.
+
+    ``lengths`` (B,) handles right-padded ragged batches: ``dt`` is zeroed at
+    padded positions, so the recurrence neither decays nor absorbs input
+    there — the cached final state equals the state at each sequence's true
+    length — and the conv tail is gathered at each sequence's own last
+    ``W-1`` positions (zero where the sequence is shorter than the window,
+    matching the reference's left zero-padding).
+    """
     B, S, _ = x.shape
     di, ns, nh, hp = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
     z, xs, Bc, Cc, dt = _proj_inputs(cfg, p, x)
@@ -150,7 +159,15 @@ def ssm_forward(
     z = ctx.shard(z, "batch", None, "model")
     dt = ctx.shard(dt, "batch", None, "model")
     u = jnp.concatenate([xs, Bc, Cc], axis=-1)
-    conv_tail = u[:, -(cfg.ssm_conv_width - 1):, :]
+    W = cfg.ssm_conv_width - 1
+    if lengths is None:
+        conv_tail = u[:, -W:, :]
+    else:
+        dt = dt * (jnp.arange(S)[None, :] < lengths[:, None])[..., None]
+        tail_pos = lengths[:, None] - W + jnp.arange(W)[None, :]   # (B, W)
+        conv_tail = jnp.take_along_axis(
+            u, jnp.maximum(tail_pos, 0)[..., None], axis=1
+        ) * (tail_pos >= 0)[..., None].astype(u.dtype)
     u = jax.nn.silu(_causal_conv(u, p["conv_w"], p["conv_b"]))
     xs, Bc, Cc = jnp.split(u, [di, di + ns], axis=-1)
     xs = ctx.shard(xs, "batch", None, "model")

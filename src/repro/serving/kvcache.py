@@ -3,17 +3,46 @@
 ``model.prefill`` returns raw per-layer K/V stacked over layer groups;
 decode expects pre-allocated (possibly ring-buffer) caches.  This module
 converts between the two, handling sliding-window ring alignment (absolute
-position p lives in slot ``p % window``).
+position p lives in slot ``p % window``), and provides the slot-wise
+insert/evict primitives the continuous scheduler uses to recycle batch
+slots mid-flight (a finished sequence's KV rows and SSM state are
+overwritten by the next admitted request).
 """
 from __future__ import annotations
 
-from typing import List
+from typing import List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import model as model_mod
+
+
+def aligned_kv(
+    cfg: ModelConfig, k: jax.Array, v: jax.Array, span: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Raw prefill K/V ``(..., S, K, hd)`` -> decode-ready ``(..., span, ...)``.
+
+    Pads/truncates to ``span`` slots; with a sliding window longer prompts
+    are ring-aligned (absolute position p -> slot ``p % span``).
+    """
+    *lead, S, K, hd = k.shape
+    kf = k.reshape((-1, S, K, hd))
+    vf = v.reshape((-1, S, K, hd))
+    n = min(S, span)
+    nk = jnp.zeros((kf.shape[0], span, K, hd), k.dtype)
+    nv = jnp.zeros_like(nk)
+    if cfg.sliding_window and S > span:
+        pos = jnp.arange(S - n, S)
+        slots = pos % span
+        nk = nk.at[:, slots].set(kf[:, -n:])
+        nv = nv.at[:, slots].set(vf[:, -n:])
+    else:
+        nk = nk.at[:, :n].set(kf[:, -n:])
+        nv = nv.at[:, :n].set(vf[:, -n:])
+    shape = tuple(lead) + (span, K, hd)
+    return nk.reshape(shape), nv.reshape(shape)
 
 
 def cache_from_prefill(
@@ -27,23 +56,54 @@ def cache_from_prefill(
         if kind != "attn":
             out.append(slot)                       # SSM state passes through
             continue
-        k, v = slot["k"], slot["v"]               # (G, B, S, K, hd)
-        G, B, S, K, hd = k.shape
         span = min(max_seq, cfg.sliding_window) if cfg.sliding_window else max_seq
-        nk = jnp.zeros((G, B, span, K, hd), k.dtype)
-        nv = jnp.zeros_like(nk)
-        n = min(S, span)
-        if cfg.sliding_window and S > span:
-            # ring alignment: token at absolute pos p -> slot p % span
-            pos = jnp.arange(S - n, S)
-            slots = pos % span
-            nk = nk.at[:, :, slots].set(k[:, :, -n:])
-            nv = nv.at[:, :, slots].set(v[:, :, -n:])
-        else:
-            nk = nk.at[:, :, :n].set(k[:, :, -n:])
-            nv = nv.at[:, :, :n].set(v[:, :, -n:])
+        nk, nv = aligned_kv(cfg, slot["k"], slot["v"], span)
         out.append({"k": nk, "v": nv})
     return out
+
+
+def scatter_prefill_rows(
+    cfg: ModelConfig, cache: List, caches: List, rows: Sequence[int]
+) -> List:
+    """Insert newcomers' prefill caches into engine decode buffers at ``rows``.
+
+    ``cache`` is the engine's per-layer (flattened over groups) buffer list;
+    ``caches`` the raw ``model.prefill`` output for the newcomer micro-batch
+    (stacked over groups).  Each newcomer's FULL slot row is overwritten —
+    KV beyond its prompt is zeroed, so no state of an evicted sequence
+    survives slot recycling.
+    """
+    pattern = model_mod.layer_pattern(cfg)
+    n_pat = len(pattern)
+    G = len(cache) // n_pat
+    rows = jnp.asarray(rows)
+    for g in range(G):
+        for j, (kind, _) in enumerate(pattern):
+            li = g * n_pat + j
+            slot = jax.tree.map(lambda a: a[g], caches[j])
+            if kind == "attn":
+                span = cache[li]["k"].shape[1]
+                nk, nv = aligned_kv(cfg, slot["k"], slot["v"], span)
+                cache[li]["k"] = cache[li]["k"].at[rows].set(nk)
+                cache[li]["v"] = cache[li]["v"].at[rows].set(nv)
+            else:
+                for key in ("h", "conv"):
+                    cache[li][key] = cache[li][key].at[rows].set(slot[key])
+    return cache
+
+
+def evict_rows(cache: List, rows: Sequence[int]) -> List:
+    """Zero batch rows across every layer buffer (slot recycling).
+
+    Not required for correctness — decode masks by per-sequence position
+    and insertion overwrites whole rows — but keeps freed slots inert
+    between eviction and the next admission.
+    """
+    rows = jnp.asarray(rows)
+    return [
+        jax.tree.map(lambda a: a.at[rows].set(jnp.zeros((), a.dtype)), layer)
+        for layer in cache
+    ]
 
 
 def cache_bytes(cache: List) -> int:

@@ -52,6 +52,28 @@ def test_swa_subquadratic_shape_independence():
     assert jnp.max(jnp.abs(out - ref)) < 2e-5
 
 
+def test_kv_mask_matches_unpadded_slice():
+    """kv_mask-ed attention over a right-padded batch == attention over the
+    unpadded per-sequence slice, at every valid query position."""
+    import numpy as np
+
+    B, S, H, K, D = 3, 16, 4, 2, 32
+    lens = [16, 11, 7]
+    q, k, v = _qkv(B, S, H, K, D)
+    kv_mask = jnp.arange(S)[None, :] < jnp.asarray(lens)[:, None]
+    out = naive_attention(q, k, v, kv_mask=kv_mask)
+    blk = blocked_attention(q, k, v, q_block=8, kv_block=8, kv_mask=kv_mask)
+    for i, n in enumerate(lens):
+        ref = naive_attention(q[i : i + 1, :n], k[i : i + 1, :n],
+                              v[i : i + 1, :n])
+        assert jnp.max(jnp.abs(out[i, :n] - ref[0])) < 2e-5
+        assert jnp.max(jnp.abs(blk[i, :n] - ref[0])) < 2e-5
+    # without the mask, padded keys leak into valid queries' context
+    bad = naive_attention(q, k, v)
+    assert float(jnp.max(jnp.abs(bad[1, :7] - out[1, :7]))) == 0  # causal: q<7 sees k<7 anyway
+    assert float(jnp.max(jnp.abs(bad[2, 8] - out[2, 8]))) > 0    # q=8 of len-7 seq attends pads
+
+
 def test_decode_matches_full_attention():
     """prefill + decode of the next token == full forward at that position."""
     from repro.configs import get_config

@@ -74,7 +74,11 @@ def test_engine_microbatch_counts():
     eng.stats.attn_microbatches = 0
     eng.decode_step(toks[:, 0], S)
     n_attn_layers = sum(1 for k, _, _ in eng.layers if k == "attn")
-    assert eng.stats.attn_microbatches == n_attn_layers * -(-B // 2)
+    # host/device segments micro-batched separately (the ω boundary splits
+    # a straddling micro-batch so the realized host fraction is exact)
+    n_host = int(round(plan.omega * B))
+    n_mb = -(-n_host // 2) + -(-(B - n_host) // 2)
+    assert eng.stats.attn_microbatches == n_attn_layers * n_mb
     # grouped dispatch: exactly ONE expert launch per MoE layer per step,
     # and every routed token-copy was processed (no capacity drops)
     n_moe_layers = sum(1 for _, f, _ in eng.layers if f == "moe")
@@ -93,6 +97,69 @@ def test_engine_generation_runs_all_archs():
         out = eng.generate(toks, DEC)
         assert out.shape == (B, DEC)
         assert int(out.max()) < cfg.vocab_size
+
+
+@pytest.mark.parametrize("arch", ["mixtral-8x7b", "jamba-1.5-large-398b"])
+def test_engine_ragged_generate_matches_per_sequence(arch):
+    """Padded ragged batch generate == each sequence generated alone,
+    token-for-token (prompt-length mask + per-sequence decode positions)."""
+    import numpy as np
+
+    cfg = get_config(arch, smoke=True)
+    params = M.init_params(cfg, KEY)
+    lens = [16, 11, 7]
+    S, DEC = max(lens), 5
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in lens]
+    padded = np.zeros((len(lens), S), np.int32)
+    for i, p in enumerate(prompts):
+        padded[i, : len(p)] = p
+    eng = ModuleBatchingEngine(
+        cfg, params, Plan(B=3, b_a=2, b_e=16, omega=0.0), max_seq=S + DEC
+    )
+    got = np.asarray(eng.generate(jnp.asarray(padded), DEC,
+                                  lengths=np.asarray(lens)))
+    for i, p in enumerate(prompts):
+        solo = ModuleBatchingEngine(
+            cfg, params, Plan(B=1, b_a=1, b_e=16, omega=0.0), max_seq=S + DEC
+        )
+        ref = np.asarray(solo.generate(jnp.asarray(p)[None], DEC))
+        assert np.array_equal(got[i], ref[0]), (i, got[i], ref[0])
+
+
+def test_engine_ragged_prefill_unpadded_logits_gather():
+    """Prefill logits of a padded shorter prompt equal the unpadded run's
+    (the seed emitted logits at the PAD position for every shorter prompt)."""
+    cfg, params, toks = _setup("mixtral-8x7b")
+    n = 9                                         # a prompt shorter than S
+    eng = ModuleBatchingEngine(
+        cfg, params, Plan(B=B, b_a=2, b_e=B, omega=0.0), max_seq=S + DEC
+    )
+    lengths = jnp.asarray([S] * (B - 1) + [n])
+    lg = eng.prefill(toks.at[B - 1, n:].set(0), lengths=lengths)
+    solo = ModuleBatchingEngine(
+        cfg, params, Plan(B=1, b_a=1, b_e=B, omega=0.0), max_seq=S + DEC
+    )
+    lg_solo = solo.prefill(toks[B - 1 :, :n])
+    assert jnp.array_equal(lg[B - 1], lg_solo[0])
+
+
+def test_omega_split_realized_host_fraction():
+    """A micro-batch straddling round(ω·B) is split at the boundary, so the
+    realized host fraction equals round(ω·B)/B exactly (the seed ran the
+    straddling micro-batch entirely on the device path)."""
+    cfg, params, toks = _setup("mixtral-8x7b")
+    for omega in (0.5, 0.25, 0.75):
+        eng = ModuleBatchingEngine(
+            cfg, params, Plan(B=B, b_a=4, b_e=B, omega=omega), max_seq=S + DEC
+        )
+        eng.prefill(toks)
+        eng.decode_step(toks[:, 0], S)
+        n_attn = sum(1 for k, _, _ in eng.layers if k == "attn")
+        want_host = int(round(omega * B)) * n_attn
+        assert eng.stats.host_attn_tokens == want_host, omega
+        assert eng.stats.device_attn_tokens == B * n_attn - want_host
 
 
 def test_unstack_layers_roundtrip():
