@@ -34,8 +34,9 @@ class Plan:
 
     def describe(self) -> str:
         return (
-            f"B={self.B} b_a={self.b_a} b_e={self.b_e} w={self.omega:.1f} "
-            f"S_exp={self.s_expert/1e9:.1f}GB S_par={self.s_params/1e9:.1f}GB"
+            f"phase={self.phase} B={self.B} b_a={self.b_a} b_e={self.b_e} "
+            f"w={self.omega:.1f} S_exp={self.s_expert/1e9:.1f}GB "
+            f"S_par={self.s_params/1e9:.1f}GB reuse={self.weight_reuse}"
         )
 
 
@@ -50,9 +51,39 @@ class PhaseEstimate:
     critical: List[str] = field(default_factory=list)
 
 
-def _resident_fraction(cfg: ModelConfig, plan: Plan) -> float:
-    mb = W.model_bytes(cfg)
-    return min(1.0, plan.s_params / mb) if mb else 0.0
+def _miss_fractions(cfg: ModelConfig, plan: Plan) -> Dict[str, float]:
+    """Per-module-class htod miss fractions under the REALIZED resident set.
+
+    ``plan.s_params`` is no longer a scalar discount applied uniformly: the
+    greedy residency policy (``workload.plan_residency`` — the same one the
+    executor's ``ParamStore`` pins weights with) decides which concrete
+    modules live on device, and each weight class is charged only for its
+    non-resident layers.  ``weight_reuse`` (FlexGen-style rounds) divides
+    the miss as before.
+    """
+    rp = W.plan_residency(cfg, plan.s_params if plan.s_params > 0 else 0.0)
+    reuse = max(plan.weight_reuse, 1)
+
+    def frac(flags) -> float:
+        flags = list(flags)
+        if not flags:
+            return 0.0
+        return sum(not f for f in flags) / len(flags) / reuse
+
+    attn_f = [rp.mixer_resident[i] for i in range(cfg.num_layers)
+              if cfg.layer_kind(i) == "attn"]
+    ssm_f = [rp.mixer_resident[i] for i in range(cfg.num_layers)
+             if cfg.layer_kind(i) == "ssm"]
+    moe_f = [rp.ffn_resident[i] for i in range(cfg.num_layers)
+             if cfg.ffn_kind(i) == "moe"]
+    dense_f = [rp.ffn_resident[i] for i in range(cfg.num_layers)
+               if cfg.ffn_kind(i) == "dense" and cfg.d_ff > 0]
+    return {
+        "attn": frac(attn_f),
+        "ssm": frac(ssm_f),
+        "moe": frac(moe_f),
+        "dense": frac(dense_f),
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -68,12 +99,11 @@ def build_decode_layer_dag(
 ) -> JobDag:
     dag = JobDag()
     B = plan.B
-    f_res = _resident_fraction(cfg, plan)
-    miss = (1.0 - f_res) / max(plan.weight_reuse, 1)
+    miss = _miss_fractions(cfg, plan)
 
     # ---- sequence mixer ----
     if kind == "attn":
-        w_bytes = W.attn_weight_bytes(cfg) * miss
+        w_bytes = W.attn_weight_bytes(cfg) * miss["attn"]
         cp_w = dag.add("attn_weights_htod", "htod", w_bytes / hw.htod_bw)
         n_gpu = int(round(B * (1.0 - plan.omega)))
         n_cpu = B - n_gpu
@@ -153,7 +183,7 @@ def build_decode_layer_dag(
         )
         mixer_done = post
     else:  # SSM layer: dense module, state stays on device/host
-        w_bytes = W.ssm_weight_bytes(cfg) * miss
+        w_bytes = W.ssm_weight_bytes(cfg) * miss["ssm"]
         cp_w = dag.add("ssm_weights_htod", "htod", w_bytes / hw.htod_bw)
         mixer_done = dag.add(
             "ssm_step",
@@ -184,7 +214,7 @@ def build_decode_layer_dag(
         # baseline systems), charged for the routed tokens only.
         cap = max(1, min(plan.b_e, B))
         rows = float(cap) if cap < B else tokens_per_expert
-        e_bytes = W.expert_weight_bytes(cfg) * miss
+        e_bytes = W.expert_weight_bytes(cfg) * miss["moe"]
         for e in range(cfg.num_experts):
             cp = dag.add(f"expert_w[{e}]", "htod", e_bytes / hw.htod_bw)
             dag.add(
@@ -199,7 +229,7 @@ def build_decode_layer_dag(
                 deps=[cp, router],
             )
     elif cfg.d_ff > 0:
-        w_bytes = W.dense_ffn_weight_bytes(cfg) * miss
+        w_bytes = W.dense_ffn_weight_bytes(cfg) * miss["dense"]
         cp = dag.add("ffn_w_htod", "htod", w_bytes / hw.htod_bw)
         dag.add(
             "dense_ffn",
@@ -229,11 +259,10 @@ def build_prefill_layer_dag(
     dag = JobDag()
     B = plan.B
     T = B * seq
-    f_res = _resident_fraction(cfg, plan)
-    miss = (1.0 - f_res) / max(plan.weight_reuse, 1)
+    miss = _miss_fractions(cfg, plan)
 
     if kind == "attn":
-        w_bytes = W.attn_weight_bytes(cfg) * miss
+        w_bytes = W.attn_weight_bytes(cfg) * miss["attn"]
         cp_w = dag.add("attn_weights_htod", "htod", w_bytes / hw.htod_bw)
         b_a = max(1, min(plan.b_a, B))
         n_micro = -(-B // b_a)
@@ -261,7 +290,7 @@ def build_prefill_layer_dag(
         )
         mixer_done = outs[-1]
     else:
-        w_bytes = W.ssm_weight_bytes(cfg) * miss
+        w_bytes = W.ssm_weight_bytes(cfg) * miss["ssm"]
         cp_w = dag.add("ssm_weights_htod", "htod", w_bytes / hw.htod_bw)
         mixer_done = dag.add(
             "ssm_scan",
@@ -286,7 +315,7 @@ def build_prefill_layer_dag(
         # no capacity constraint (gather-exact), as in the decode DAG
         cap = max(1, min(plan.b_e, T))
         rows = float(cap) if cap < T else tokens_per_expert
-        e_bytes = W.expert_weight_bytes(cfg) * miss
+        e_bytes = W.expert_weight_bytes(cfg) * miss["moe"]
         for e in range(cfg.num_experts):
             cp = dag.add(f"expert_w[{e}]", "htod", e_bytes / hw.htod_bw)
             dag.add(
@@ -301,7 +330,7 @@ def build_prefill_layer_dag(
                 deps=[cp, router],
             )
     elif cfg.d_ff > 0:
-        w_bytes = W.dense_ffn_weight_bytes(cfg) * miss
+        w_bytes = W.dense_ffn_weight_bytes(cfg) * miss["dense"]
         cp = dag.add("ffn_w_htod", "htod", w_bytes / hw.htod_bw)
         dag.add(
             "dense_ffn",

@@ -17,10 +17,29 @@ batched computations —
   capacity are dropped and accounted in ``EngineStats``;
 * dense modules (SSM blocks, shared FFNs, lm_head) run at full batch.
 
-The seed's sequential per-expert loop is retained as ``expert_path='loop'``
-— it is the numerical oracle the grouped path is tested against
-(tests/test_grouped_dispatch.py) and the baseline for the loop-vs-grouped
-benchmark (benchmarks/engine_walltime.py).
+**Weight residency (the paper's S_Params / S_Expert, Fig. 6).**  Every
+module stage pulls its parameters through a ``serving.weights.ParamStore``
+handle instead of captured dicts.  By default the store pins everything on
+device (``resident_bytes=None``); with ``stream_weights=True`` it realizes
+``Plan.s_params`` as a greedy resident set (base embed/head first, then
+mixers/norms, then expert stacks — ``workload.plan_residency``, the same
+policy the planner's cost model charges misses with) and keeps the rest
+host-side, served through a double-buffered in-flight window sized by
+``Plan.s_expert``: the engine issues the async htod prefetch of layer
+*l+1*'s streamed modules before launching layer *l*'s FFN/grouped GEMM, so
+the copy hides behind compute with no host syncs.  Streamed generation is
+token-for-token identical to fully-resident generation (property-tested in
+tests/test_weights.py); transfer bytes and stall seconds are folded into
+``EngineStats`` by ``sync_stats()``.
+
+Prefill shares the layer-major structure: each layer's weights are acquired
+ONCE and reused across all ``b_a``-sequence micro-batches (module-based
+batching's weight amortization), and the MoE stage runs through the same
+grouped dispatch as decode (``grouped_prefill=True``, the default) with the
+capacity auto-raised to the micro-batch token count so no routed copy is
+ever dropped; ``grouped_prefill=False`` opts prefill back into the exact
+dense-combine reference MoE, and ``expert_path='loop'`` opts decode into
+the seed's sequential per-expert loop.
 
 Outputs are bit-compatible with the reference ``models.decode_step`` up to
 bf16 accumulation order (asserted in tests/test_engine.py).  Every module is
@@ -41,23 +60,12 @@ from repro.configs.base import ModelConfig
 from repro.core.dag_builder import Plan
 from repro.core.host_attention import host_decode_attention
 from repro.models import attention as attn_mod
-from repro.models import model as model_mod
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
-from repro.models.blocks import ffn_apply
+from repro.models.blocks import ffn_apply, layer_forward
 from repro.models.layers import rms_norm
-
-
-def unstack_layers(cfg: ModelConfig, params: Dict) -> List[Tuple[str, str, Dict]]:
-    """Flatten group-stacked layer params into a per-layer list."""
-    pattern = model_mod.layer_pattern(cfg)
-    G = model_mod.num_groups(cfg)
-    layers = []
-    for g in range(G):
-        for j, (kind, ffn) in enumerate(pattern):
-            slot = jax.tree.map(lambda a: a[g], params["layers"][j])
-            layers.append((kind, ffn, slot))
-    return layers
+from repro.serving.weights import ParamStore, unstack_layers  # noqa: F401
+from repro.sharding.specs import ShardCtx
 
 
 # ---------------------------------------------------------------------------
@@ -155,6 +163,18 @@ def _embed_module(cfg, embed, tokens):
     return jnp.take(embed, tokens, axis=0)
 
 
+@functools.partial(jax.jit, static_argnames=("cfg", "kind", "ffn", "sctx"))
+def _prefill_layer_module(cfg, kind, ffn, sctx, p, x, positions, lengths):
+    """One full layer (mixer + FFN stage) over a prefill micro-batch.
+
+    Prefill's per-layer launch unit: the engine iterates layers in the
+    outer loop (weights acquired once per layer, reused by every
+    micro-batch) and micro-batches in the inner loop.  ``sctx`` selects the
+    MoE path — grouped prefill passes ``moe_capacity`` = the micro-batch
+    token count, so no routed copy is dropped."""
+    return layer_forward(cfg, kind, ffn, p, x, sctx, positions, lengths)
+
+
 # ---------------------------------------------------------------------------
 # Engine
 # ---------------------------------------------------------------------------
@@ -166,6 +186,8 @@ class EngineStats:
     expert_tokens_dropped: int = 0       # routed copies over the b_e capacity
     host_attn_tokens: int = 0
     device_attn_tokens: int = 0
+    weight_htod_bytes: int = 0           # streamed weight bytes copied htod
+    prefetch_wait_s: float = 0.0         # stall waiting on weight transfers
 
 
 class ModuleBatchingEngine:
@@ -175,16 +197,27 @@ class ModuleBatchingEngine:
 
     * ``'grouped'`` (default) — one jitted grouped-dispatch launch per MoE
       layer; routing stays on device, ``plan.b_e`` is the per-expert token
-      capacity ``C`` of the ``(E, C, D)`` dispatch buffer.
+      capacity ``C`` of the ``(E, C, D)`` dispatch buffer.  Prefill shares
+      the same grouped implementation (``grouped_prefill=True``, the
+      default) with the capacity auto-raised to the micro-batch token count
+      (never below, so zero ``expert_tokens_dropped`` at prefill by
+      construction); pass ``grouped_prefill=False`` for the exact-reference
+      dense-combine prefill.
     * ``'loop'`` — the seed's host-scheduled sequential per-expert loop,
       kept as the numerical oracle (syncs routing to host every step).
 
-    ``grouped_prefill=True`` additionally routes prefill's MoE stage through
-    the same grouped implementation (``ShardCtx(moe_dispatch='grouped')``),
-    so both phases share one expert path.  Caveat: prefill capacity comes
-    from ``cfg.capacity_factor`` (not ``plan.b_e``), prefill drops are not
-    counted in ``EngineStats``, and a ragged batch's pad tokens route too
-    (consuming capacity) — opt-in until tuned (see ROADMAP).
+    ``grouped_prefill`` is independent of ``expert_path`` (prefill and
+    decode paths are selected separately), so a loop-decode engine still
+    shares the grouped prefill numerics by default and grouped-vs-loop
+    generation stays token-for-token comparable.
+
+    **Weight residency.**  All module stages read parameters through
+    ``self.store`` (a ``serving.weights.ParamStore``).  By default every
+    weight is device-resident.  ``stream_weights=True`` keeps only the plan's
+    ``s_params`` greedy resident set on device and streams the rest from
+    host through a double-buffered async prefetch window (``prefetch=False``
+    degrades to serialized on-demand fetches); ``resident_bytes`` overrides
+    the budget.  A pre-built ``store`` can be passed directly.
     """
 
     def __init__(
@@ -194,16 +227,29 @@ class ModuleBatchingEngine:
         plan: Plan,
         max_seq: int = 512,
         expert_path: str = "grouped",
-        grouped_prefill: bool = False,
+        grouped_prefill: bool = True,
+        store: Optional[ParamStore] = None,
+        stream_weights: bool = False,
+        resident_bytes: Optional[float] = None,
+        prefetch: bool = True,
     ) -> None:
         assert expert_path in ("grouped", "loop"), expert_path
         self.cfg = cfg
-        self.params = params
         self.plan = plan
         self.max_seq = max_seq
         self.expert_path = expert_path
         self.grouped_prefill = grouped_prefill
-        self.layers = unstack_layers(cfg, params)
+        if store is None:
+            store = ParamStore.build(
+                cfg, params, plan, stream_weights=stream_weights,
+                resident_bytes=resident_bytes, prefetch=prefetch,
+            )
+        self.store = store
+        self.schema = store.schema                  # [(kind, ffn)] per layer
+        # kept for introspection/back-compat: (kind, ffn, _) triples
+        self.layers: List[Tuple[str, str, None]] = [
+            (k, f, None) for k, f in self.schema
+        ]
         self.cache: Optional[List] = None
         self.stats = EngineStats()
         # device-side counters, folded into `stats` by sync_stats(); keeping
@@ -217,29 +263,53 @@ class ModuleBatchingEngine:
         return max(1, min(self.plan.b_e, batch))
 
     def sync_stats(self) -> EngineStats:
-        """Materialize the device-side expert counters (one host sync)."""
+        """Materialize the device-side expert counters (one host sync) and
+        drain the store's transfer accounting."""
         self.stats.expert_tokens += int(self._kept_dev)
         self.stats.expert_tokens_dropped += int(self._dropped_dev)
         self._kept_dev = jnp.zeros((), jnp.int32)
         self._dropped_dev = jnp.zeros((), jnp.int32)
+        htod, wait = self.store.take_counters()
+        self.stats.weight_htod_bytes += htod
+        self.stats.prefetch_wait_s += wait
         return self.stats
 
     # -- cache management ---------------------------------------------
     def init_cache(self, batch: int) -> None:
         self.cache = []
-        for kind, _, _ in self.layers:
+        for kind, _ in self.schema:
             from repro.models.blocks import init_layer_cache
 
             self.cache.append(init_layer_cache(self.cfg, kind, batch, self.max_seq))
 
+    def _write_cache_rows(self, li: int, kind: str, entry: Dict, rows) -> None:
+        """Insert a micro-batch's raw prefill cache into batch rows ``rows``
+        of layer ``li``'s decode buffer (``kvcache.insert_prefill_rows``)."""
+        from repro.serving.kvcache import insert_prefill_rows
+
+        self.cache[li] = insert_prefill_rows(
+            self.cfg, kind, self.cache[li], entry, rows
+        )
+
     # -- phases ---------------------------------------------------------
+    def _prefill_sctx(self, mb_tokens: int) -> ShardCtx:
+        """MoE path for prefill: the grouped dispatch shared with decode,
+        with per-expert capacity auto-raised to the micro-batch token count
+        — an upper bound on any expert's routed load, so zero drops (and
+        thus exactness) by construction, at most E/k x the balanced
+        per-expert load at B*S for the planner's b_a."""
+        if self.grouped_prefill and self.cfg.has_moe:
+            return ShardCtx(moe_dispatch="grouped",
+                            moe_capacity=max(1, mb_tokens))
+        return ShardCtx()
+
     def prefill(self, tokens: jax.Array, frontend_emb=None, lengths=None) -> jax.Array:
-        """Prefill via the reference forward (attention micro-batched by
-        b_a sequences), filling the engine cache.  Returns last logits.
+        """Prefill (attention micro-batched by b_a sequences), filling the
+        engine cache.  Returns last logits.
 
         ``lengths`` (B,) makes a ragged right-padded batch exact: pads are
         masked out of attention/SSM state and each sequence's logits come
-        from its true last token (see ``model.forward``).
+        from its true last token.
         """
         B, S = tokens.shape
         self.init_cache(B)
@@ -252,9 +322,12 @@ class ModuleBatchingEngine:
     ) -> jax.Array:
         """Prefill ``tokens`` (n, S) into existing batch rows ``rows`` (n,).
 
-        The continuous scheduler's admission path: newcomers are prefilled
-        into the slots freed by finished sequences, overwriting those rows'
-        KV-cache and SSM state (``serving.kvcache.scatter_prefill_rows``)
+        Layer-major module batching: the outer loop walks layers — each
+        layer's weights are pulled through the store ONCE (streamed modules
+        prefetched a layer ahead) and reused by every ``b_a``-sequence
+        micro-batch of the inner loop.  Also the continuous scheduler's
+        admission path: newcomers are prefilled into the slots freed by
+        finished sequences, overwriting those rows' KV-cache and SSM state
         while every other slot's state is untouched.  Returns the
         newcomers' last-token logits (n, V).
         """
@@ -264,28 +337,39 @@ class ModuleBatchingEngine:
         assert S <= self.max_seq
         if cfg.sliding_window:
             assert S <= cfg.sliding_window, "engine prefill requires prompt <= window"
-        from repro.serving.kvcache import scatter_prefill_rows
-        from repro.sharding.specs import ShardCtx
-
-        sctx = (
-            ShardCtx(moe_dispatch="grouped")
-            if (self.grouped_prefill and self.expert_path == "grouped")
-            else ShardCtx()
-        )
         rows = np.asarray(rows)
         lengths = None if lengths is None else jnp.asarray(lengths, jnp.int32)
-        logits_parts = []
         b_a = max(1, min(plan.b_a, n))
-        for lo in range(0, n, b_a):
-            hi = min(n, lo + b_a)
-            mb = tokens[lo:hi]
-            fe = None if frontend_emb is None else frontend_emb[lo:hi]
-            ln = None if lengths is None else lengths[lo:hi]
-            lg, caches = model_mod.prefill(cfg, self.params, mb, fe, sctx, ln)
-            logits_parts.append(lg[:, 0])
-            scatter_prefill_rows(cfg, self.cache, caches, rows[lo:hi])
-            self.stats.attn_microbatches += 1
-        return jnp.concatenate(logits_parts, axis=0)
+        spans = [(lo, min(n, lo + b_a)) for lo in range(0, n, b_a)]
+        positions = jnp.arange(S)[None, :]
+        xs = []
+        for lo, hi in spans:
+            x = _embed_module(cfg, self.store.base["embed"], tokens[lo:hi])
+            if frontend_emb is not None:
+                fe = frontend_emb[lo:hi]
+                F = fe.shape[1]
+                x = jnp.concatenate([fe.astype(x.dtype), x[:, F:]], axis=1)
+            xs.append(x)
+        for li, (kind, ffn) in enumerate(self.schema):
+            p = self.store.acquire(li)
+            self.store.prefetch(li + 1)     # hide l+1's copy behind this layer
+            outs = []
+            for (lo, hi), x in zip(spans, xs):
+                sctx = self._prefill_sctx((hi - lo) * S)
+                ln = None if lengths is None else lengths[lo:hi]
+                y, entry, _ = _prefill_layer_module(
+                    cfg, kind, ffn, sctx, p, x, positions, ln
+                )
+                self._write_cache_rows(li, kind, entry, rows[lo:hi])
+                outs.append(y)
+            xs = outs
+        self.stats.attn_microbatches += len(spans)
+        x_full = jnp.concatenate(xs, axis=0)
+        if lengths is None:
+            h_last = x_full[:, -1]
+        else:
+            h_last = x_full[jnp.arange(n), lengths - 1]
+        return _head_module(cfg, cfg.tie_embeddings, self.store.base, h_last)
 
     def decode_step(self, tokens: jax.Array, pos) -> jax.Array:
         """One module-batched decode step for all B sequences.
@@ -293,23 +377,29 @@ class ModuleBatchingEngine:
         ``pos`` is the write/attend position: a scalar for uniform batches,
         or a per-sequence (B,) vector for ragged batches and the continuous
         scheduler (each slot decodes at its own sequence position).
+
+        Streamed layers pipeline with compute: layer *l+1*'s weight
+        prefetch is issued after layer *l*'s mixer and before its FFN /
+        grouped-GEMM launch, so the htod copy rides the async dispatch
+        queue behind the step's heaviest compute.
         """
-        cfg, plan = self.cfg, self.plan
-        B = tokens.shape[0]
+        cfg = self.cfg
         pos = jnp.asarray(pos, jnp.int32)
-        x = _embed_module(cfg, self.params["embed"], tokens)
-        for li, (kind, ffn, p) in enumerate(self.layers):
+        x = _embed_module(cfg, self.store.base["embed"], tokens)
+        for li, (kind, ffn) in enumerate(self.schema):
+            p = self.store.acquire(li)
             if kind == "attn":
                 x = x + self._attention_stage(li, p, x, pos)
             else:
                 y, state = _ssm_decode_module(cfg, p, x, self.cache[li])
                 self.cache[li] = state
                 x = x + y
+            self.store.prefetch(li + 1)     # before the FFN/grouped launch
             if ffn == "moe":
                 x = x + self._expert_stage(p, x)
             elif cfg.d_ff > 0 and "ffn" in p:
                 x = x + _ffn_module(cfg, p, x)
-        return _head_module(cfg, cfg.tie_embeddings, self.params, x)
+        return _head_module(cfg, cfg.tie_embeddings, self.store.base, x)
 
     # -- module stages ---------------------------------------------------
     def _attention_stage(self, li, p, x, pos) -> jax.Array:

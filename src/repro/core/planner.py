@@ -10,7 +10,7 @@ maximum.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Iterable, List, Optional, Tuple
 
 from repro.configs.base import ModelConfig
@@ -38,6 +38,44 @@ def host_batch_limit(cfg: ModelConfig, hw: HardwareProfile, ctx: int) -> int:
     return max(0, int(free / per_seq))
 
 
+def host_kv_budget(cfg: ModelConfig, hw: HardwareProfile) -> float:
+    """Eq. 2's free host bytes for offloaded KV/state: m_c - S_Model
+    (clamped at 0).  The continuous scheduler admits a request only while
+    the KV bytes of every in-flight sequence (at its full prompt+decode
+    extent) fit here."""
+    return max(0.0, hw.host_mem_bytes - W.model_bytes(cfg))
+
+
+def select_residency(
+    cfg: ModelConfig, hw: HardwareProfile, plan: Plan, ctx: int, phase: str
+) -> Optional[Plan]:
+    """Realize S_Params/S_Expert for a candidate plan (Table 2 -> policy).
+
+    ``s_params``/``s_expert`` are no longer free variables of the estimate:
+    given the non-weight device footprint of Eq. 3, either the whole model
+    fits in the spare bytes (fully resident, no stream buffer) or the spare
+    is split into a double-buffered stream window
+    (``workload.stream_buffer_bytes``) plus a greedily-filled resident set
+    (``workload.plan_residency`` — the exact set the executor's ParamStore
+    pins).  Returns None when not even the always-resident base weights and
+    one stream window fit.
+    """
+    footprint = device_memory_used(
+        cfg, replace(plan, s_params=0.0, s_expert=0.0), ctx, phase
+    )
+    spare = hw.device_mem_bytes - footprint
+    if spare <= 0:
+        return None
+    mb = W.model_bytes(cfg)
+    if mb <= spare:
+        return replace(plan, s_params=float(mb), s_expert=0.0)
+    s_expert = W.stream_buffer_bytes(cfg, depth=2)
+    rp = W.plan_residency(cfg, spare - s_expert)
+    if rp.resident_bytes + s_expert > spare:
+        return None                         # base weights + window don't fit
+    return replace(plan, s_params=rp.resident_bytes, s_expert=s_expert)
+
+
 def device_memory_used(
     cfg: ModelConfig, plan: Plan, ctx: int, phase: str
 ) -> float:
@@ -50,11 +88,17 @@ def device_memory_used(
     else:
         s_is = W.intermediate_bytes_prefill(cfg, plan.b_a, ctx)
     # accumulated hidden states for the expert stage + the grouped-dispatch
-    # (E, C, D) capacity buffer (C = b_e, clamped to the tokens that exist)
+    # (E, C, D) capacity buffer.  At decode C = b_e (clamped to the tokens
+    # that exist); at prefill the engine auto-raises C to the micro-batch
+    # token count b_a*seq (zero-drop grouped prefill), so that is what
+    # Eq. 3 must charge — not the decode b_e.
     tokens = plan.B * (ctx if phase == "prefill" else 1)
     s_is += tokens * 2 * cfg.d_model * W.BYTES
     if cfg.has_moe:
-        cap = max(1, min(plan.b_e, tokens))
+        if phase == "prefill":
+            cap = max(1, min(plan.b_a * ctx, tokens))
+        else:
+            cap = max(1, min(plan.b_e, tokens))
         s_is += W.expert_buffer_bytes(cfg, cap)
     return plan.s_params + plan.s_expert + s_dense + kv_gpu + s_is
 
@@ -105,46 +149,47 @@ def search_decode(
 
     best: Optional[Tuple[float, Plan, PhaseEstimate]] = None
     n_eval = 0
-    e_buf = W.expert_weight_bytes(cfg) if cfg.has_moe else 0.0
-    spare_candidates = [0.0]
-    # b_e is the per-expert capacity of the (E, C, D) dispatch buffer:
-    # enumerate headroom factors over the balanced per-expert load (never
-    # below it — under-provisioning trades dropped tokens for speed, which
-    # the throughput objective cannot see), clamped to B (the most tokens
-    # one expert can receive per decode step).
-    if cfg.has_moe:
-        per_e = max(1, -(-B * cfg.experts_per_token // max(cfg.num_experts, 1)))
-        b_e_grid = sorted(
-            {max(1, min(B, int(per_e * f))) for f in (1.0, 1.25, 1.5, 2.0)}
-        )
-    else:
-        b_e_grid = [1]
-    for b_a in _pow2_grid(32, max(32, B)):
-        for b_e in b_e_grid:
-            for omega in omega_grid:
-                for s_expert in ({e_buf, 2 * e_buf} if e_buf else {0.0}):
-                    for s_params in spare_candidates:
-                        plan = Plan(
-                            B=B, b_a=b_a, b_e=b_e, omega=omega,
-                            s_expert=s_expert, s_params=s_params,
-                            phase="decode",
-                        )
-                        if not device_memory_ok(cfg, hw, plan, ctx, "decode"):
-                            continue
-                        # spare device memory can cache parameters
-                        spare = hw.device_mem_bytes - device_memory_used(
-                            cfg, plan, ctx, "decode"
-                        )
-                        if s_params == 0.0 and spare > 1e9:
-                            plan = Plan(
-                                B=B, b_a=b_a, b_e=b_e, omega=omega,
-                                s_expert=s_expert, s_params=spare * 0.9,
-                                phase="decode",
-                            )
-                        est = estimate_decode(cfg, hw, plan, ctx)
-                        n_eval += 1
-                        if best is None or est.throughput > best[0]:
-                            best = (est.throughput, plan, est)
+    # B starts at the host-memory maximum (the paper's choice).  Under the
+    # REALIZABLE residency policy a plan must also fit its grouped dispatch
+    # buffer + stream window + base weights on device — at small contexts
+    # the host-max B can make that impossible, so B is halved until a
+    # realizable plan exists (the old free-variable search would return
+    # plans the engine could not execute).
+    B_try = B
+    while best is None and B_try >= 1:
+        # b_e is the per-expert capacity of the (E, C, D) dispatch buffer:
+        # enumerate headroom factors over the balanced per-expert load
+        # (never below it — under-provisioning trades dropped tokens for
+        # speed, which the throughput objective cannot see), clamped to B
+        # (the most tokens one expert can receive per decode step).
+        if cfg.has_moe:
+            per_e = max(
+                1, -(-B_try * cfg.experts_per_token // max(cfg.num_experts, 1))
+            )
+            b_e_grid = sorted(
+                {max(1, min(B_try, int(per_e * f)))
+                 for f in (1.0, 1.25, 1.5, 2.0)}
+            )
+        else:
+            b_e_grid = [1]
+        for b_a in _pow2_grid(32, max(32, B_try)):
+            for b_e in b_e_grid:
+                for omega in omega_grid:
+                    plan = select_residency(
+                        cfg, hw,
+                        Plan(B=B_try, b_a=b_a, b_e=b_e, omega=omega,
+                             phase="decode"),
+                        ctx, "decode",
+                    )
+                    if plan is None or not device_memory_ok(
+                        cfg, hw, plan, ctx, "decode"
+                    ):
+                        continue
+                    est = estimate_decode(cfg, hw, plan, ctx)
+                    n_eval += 1
+                    if best is None or est.throughput > best[0]:
+                        best = (est.throughput, plan, est)
+        B_try //= 2
     assert best is not None, "no feasible decode plan"
     return SearchResult(best[1], best[2], n_eval)
 
@@ -159,7 +204,6 @@ def search_prefill(
     B = min(B or B_max, B_max)
     best: Optional[Tuple[float, Plan, PhaseEstimate]] = None
     n_eval = 0
-    e_buf = W.expert_weight_bytes(cfg) if cfg.has_moe else 0.0
     for B_try in _pow2_grid(8, max(8, B)):
         for b_a in _pow2_grid(1, B_try):
             # prefill capacity: the balanced per-expert share of the B*seq
@@ -170,11 +214,14 @@ def search_prefill(
                 b_e = max(1, min(T, int(per_e * cfg.capacity_factor) + 1))
             else:
                 b_e = 1
-            plan = Plan(
-                B=B_try, b_a=b_a, b_e=b_e,
-                omega=0.0, s_expert=e_buf, s_params=0.0, phase="prefill",
+            plan = select_residency(
+                cfg, hw,
+                Plan(B=B_try, b_a=b_a, b_e=b_e, omega=0.0, phase="prefill"),
+                seq, "prefill",
             )
-            if not device_memory_ok(cfg, hw, plan, seq, "prefill"):
+            if plan is None or not device_memory_ok(
+                cfg, hw, plan, seq, "prefill"
+            ):
                 continue
             est = estimate_prefill(cfg, hw, plan, seq)
             n_eval += 1

@@ -11,6 +11,7 @@ context length visible to attention at decode time.
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional
 
 from repro.configs.base import ModelConfig
 
@@ -48,6 +49,15 @@ def expert_buffer_bytes(cfg: ModelConfig, capacity: int) -> float:
 
 def dense_ffn_weight_bytes(cfg: ModelConfig) -> float:
     return 3 * cfg.d_model * cfg.d_ff * BYTES
+
+
+def moe_layer_weight_bytes(cfg: ModelConfig) -> float:
+    """One MoE layer's streamable FFN weights: all expert stacks + the
+    router (stored f32).  This is the unit the streamed store fetches —
+    the grouped GEMM needs every expert of the layer at once."""
+    if not cfg.has_moe:
+        return 0.0
+    return cfg.num_experts * expert_weight_bytes(cfg) + cfg.d_model * cfg.num_experts * 4
 
 
 def ssm_weight_bytes(cfg: ModelConfig) -> float:
@@ -164,6 +174,133 @@ def dense_module_bytes_per_layer(cfg: ModelConfig) -> float:
     if c.n_dense_ffn:
         per = max(per, dense_ffn_weight_bytes(cfg))
     return per
+
+
+# ---------------------------------------------------------------------------
+# Weight-residency policy (S_Params / S_Expert of Table 2, realized)
+# ---------------------------------------------------------------------------
+def mixer_weight_bytes(cfg: ModelConfig, kind: str) -> float:
+    """Sequence-mixer module weights (norms included) for one layer."""
+    norms = 2 * cfg.d_model * BYTES
+    if kind == "attn":
+        return attn_weight_bytes(cfg) + norms
+    return ssm_weight_bytes(cfg) + norms
+
+
+def ffn_module_weight_bytes(cfg: ModelConfig, ffn: str) -> float:
+    """FFN-stage module weights for one layer ('moe' or 'dense')."""
+    if ffn == "moe":
+        return moe_layer_weight_bytes(cfg)
+    return dense_ffn_weight_bytes(cfg) if cfg.d_ff > 0 else 0.0
+
+
+def base_weight_bytes(cfg: ModelConfig) -> float:
+    """Always-resident weights: embedding, final norm, lm_head.  They are
+    touched every token (embed/head bracket each step), so the store pins
+    them regardless of the budget."""
+    per = cfg.vocab_size * cfg.d_model * BYTES
+    total = per + cfg.d_model * BYTES
+    if not cfg.tie_embeddings:
+        total += per
+    return total
+
+
+def stream_module_bytes(cfg: ModelConfig) -> float:
+    """Largest per-layer streamed working set — sizes ONE slot of the
+    device-side stream buffer.  The store stages a whole layer's streamed
+    modules together (mixer AND FFN stage when nothing is resident), so a
+    slot is charged as the worst single layer's total, not the largest
+    individual module."""
+    per = 0.0
+    for i in range(cfg.num_layers):
+        layer = mixer_weight_bytes(cfg, cfg.layer_kind(i)) + \
+            ffn_module_weight_bytes(cfg, cfg.ffn_kind(i))
+        per = max(per, layer)
+    return per
+
+
+def stream_buffer_bytes(cfg: ModelConfig, depth: int = 2) -> float:
+    """Device bytes of the double-buffered weight-stream window (S_Expert):
+    ``depth`` slots of the largest streamed module — layer l's working set
+    plus layer l+1's in-flight prefetch.  The Eq. 3 sibling of
+    ``expert_buffer_bytes`` for weight streaming."""
+    return depth * stream_module_bytes(cfg)
+
+
+@dataclass(frozen=True)
+class ResidencyPlan:
+    """Greedy device-residency split of the model weights under a byte
+    budget (``Plan.s_params``).  The SAME policy drives the planner's cost
+    model (``dag_builder``) and the executor's ``serving.weights.ParamStore``
+    — what the planner predicts resident is exactly what the store pins.
+
+    Fill order: base (embed/head/final-norm, always pinned) -> sequence
+    mixers + norms in layer order -> dense FFNs -> MoE expert stacks in
+    layer order.  Mixers are tiny and touched every layer; expert stacks
+    are the bulk and the last to fit (paper Fig. 6: S_Expert streams them).
+    """
+
+    base_bytes: float                      # always-resident bytes
+    resident_bytes: float                  # realized total incl. base
+    mixer_resident: tuple                  # per layer: bool
+    ffn_resident: tuple                    # per layer: bool (True if no FFN)
+
+    @property
+    def fully_resident(self) -> bool:
+        return all(self.mixer_resident) and all(self.ffn_resident)
+
+    def n_streamed(self) -> int:
+        return sum(not r for r in self.mixer_resident) + sum(
+            not r for r in self.ffn_resident
+        )
+
+
+def plan_residency(cfg: ModelConfig, s_params: Optional[float]) -> ResidencyPlan:
+    """Realize ``Plan.s_params`` as a concrete resident set (greedy fill).
+
+    ``s_params=None`` — or any budget >= ``model_bytes`` — means everything
+    resident (no streaming): the per-module size formulas are a POLICY, not
+    exact array bytes (e.g. the router is stored f32 while ``model_bytes``
+    charges every param at ``BYTES``), so without this rule a budget of
+    exactly ``model_bytes`` would strand the last greedy module host-side
+    and break the planner's fully-resident contract.  The base set is
+    pinned even when it exceeds the budget — the executor cannot run
+    without embeddings/head on device — so ``resident_bytes`` may exceed a
+    tiny ``s_params``.
+    """
+    L = cfg.num_layers
+    if s_params is None or s_params >= model_bytes(cfg):
+        return ResidencyPlan(
+            base_weight_bytes(cfg), model_bytes(cfg),
+            (True,) * L, (True,) * L,
+        )
+    base = base_weight_bytes(cfg)
+    budget = max(0.0, float(s_params) - base)
+    mixer = [False] * L
+    ffn = [False] * L
+    used = base
+    # greedy order: mixers, dense FFNs, then expert stacks
+    order = (
+        [("mixer", i, mixer_weight_bytes(cfg, cfg.layer_kind(i)))
+         for i in range(L)]
+        + [("ffn", i, ffn_module_weight_bytes(cfg, "dense"))
+           for i in range(L) if cfg.ffn_kind(i) == "dense"]
+        + [("ffn", i, ffn_module_weight_bytes(cfg, "moe"))
+           for i in range(L) if cfg.ffn_kind(i) == "moe"]
+    )
+    for which, i, nbytes in order:
+        if nbytes <= 0.0:                  # no module => trivially resident
+            (mixer if which == "mixer" else ffn)[i] = True
+            continue
+        if nbytes <= budget:
+            (mixer if which == "mixer" else ffn)[i] = True
+            budget -= nbytes
+            used += nbytes
+    # layers without an FFN module count as resident
+    for i in range(L):
+        if cfg.ffn_kind(i) == "dense" and cfg.d_ff <= 0:
+            ffn[i] = True
+    return ResidencyPlan(base, used, tuple(mixer), tuple(ffn))
 
 
 # ---------------------------------------------------------------------------

@@ -1,7 +1,7 @@
 """Serving launcher: plan with the paper's search, then run the engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
-        --requests 16 --prompt-len 32 --decode-len 16
+        --requests 16 --prompt-len 32 --decode-len 16 --stream-weights
 """
 from __future__ import annotations
 
@@ -10,12 +10,13 @@ import argparse
 import jax
 
 from repro.configs import get_config
-from repro.core import planner
+from repro.core import planner, workload as W
 from repro.core.dag_builder import Plan
 from repro.core.hardware import PROFILES
 from repro.data.datasets import DatasetSpec, synthetic_requests
 from repro.models import model as M
 from repro.serving.scheduler import serve_dataset
+from repro.serving.weights import ParamStore
 
 
 def main() -> None:
@@ -42,6 +43,19 @@ def main() -> None:
                          "over requests, e.g. 8,32,128")
     ap.add_argument("--eos-id", type=int, default=None,
                     help="token id that finishes a sequence early")
+    ap.add_argument("--stream-weights", action="store_true",
+                    help="execute through the streamed parameter store: "
+                         "weights beyond the resident budget stay host-side "
+                         "and are double-buffer prefetched per layer")
+    ap.add_argument("--resident-gb", type=float, default=None,
+                    help="device bytes (GB) of the greedy resident weight "
+                         "set; implies --stream-weights (default when "
+                         "streaming: 0 — the smoke model is tiny, so the "
+                         "planned S_Params would pin everything and stream "
+                         "nothing)")
+    ap.add_argument("--no-prefetch", action="store_true",
+                    help="disable the async prefetch (streamed-serial: "
+                         "fetch-on-demand, copy serialized with compute)")
     args = ap.parse_args()
 
     hw = PROFILES[args.profile]
@@ -50,6 +64,11 @@ def main() -> None:
     full = get_config(args.arch)
     res = planner.search_decode(full, hw, ctx=args.prompt_len + args.decode_len)
     print(f"planned ({full.name} on {hw.name}): {res.plan.describe()}")
+    rp_full = W.plan_residency(full, res.plan.s_params)
+    print(f"planned residency: {rp_full.resident_bytes/1e9:.1f}GB resident "
+          f"of {W.model_bytes(full)/1e9:.1f}GB model "
+          f"({rp_full.n_streamed()} modules streamed, stream window "
+          f"{res.plan.s_expert/1e9:.1f}GB)")
     print(f"predicted decode throughput: {res.estimate.throughput:.0f} tok/s")
 
     # 2. execute module-based batching at smoke scale with the same shape
@@ -69,10 +88,30 @@ def main() -> None:
         # accumulated batch, so the planned value carries over directly
         b_e=res.plan.b_e,
         omega=res.plan.omega if cfg.has_attention else 0.0,
+        s_params=res.plan.s_params,
+        s_expert=res.plan.s_expert,
     )
+    # --resident-gb implies streaming; at smoke scale the full-model
+    # S_Params would pin everything, so the streamed smoke run defaults to
+    # resident_bytes=0 to actually exercise the stream path
+    stream = args.stream_weights or args.resident_gb is not None
+    resident_bytes = (
+        0.0 if args.resident_gb is None else args.resident_gb * 1e9
+    )
+    store = None
+    if stream:
+        # the ONE store every scheduler engine executes through — built
+        # here so the realized split can be printed before serving
+        store = ParamStore(
+            cfg, params, resident_bytes=resident_bytes,
+            prefetch=not args.no_prefetch,
+        )
+        print(f"realized residency (smoke): {store.describe()}")
     report = serve_dataset(cfg, params, requests, plan, args.decode_len,
                            expert_path=args.expert_path,
-                           scheduler=args.scheduler, eos_id=args.eos_id)
+                           scheduler=args.scheduler, eos_id=args.eos_id,
+                           store=store,
+                           hw=hw if args.scheduler == "continuous" else None)
     print(f"served {args.requests} requests in {report.total_s:.2f}s "
           f"({report.decode_throughput:.1f} decode tok/s on this host, "
           f"{report.expert_tokens_dropped} routed copies dropped)")
@@ -80,6 +119,12 @@ def main() -> None:
           f"(wasted {report.wasted_slot_steps}, "
           f"occupancy {report.occupancy:.0%}); "
           f"mean request latency {report.mean_latency_s:.2f}s")
+    if stream:
+        print(f"weight streaming: {report.htod_gb:.3f}GB htod, "
+              f"prefetch stall {report.prefetch_wait_s:.3f}s")
+    if report.admission_deferrals:
+        print(f"admissions deferred by the Eq. 2 host KV budget: "
+              f"{report.admission_deferrals}")
 
 
 if __name__ == "__main__":

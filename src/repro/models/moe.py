@@ -441,5 +441,7 @@ def moe_apply(cfg: ModelConfig, p, x, ctx: ShardCtx = ShardCtx()):
             return moe_apply_a2a(cfg, p, x, ctx)
         return moe_apply_sharded(cfg, p, x, ctx)
     if dispatch == "grouped":
-        return moe_apply_grouped(cfg, p, x)
+        return moe_apply_grouped(
+            cfg, p, x, capacity=getattr(ctx, "moe_capacity", None)
+        )
     return moe_apply_local(cfg, p, x)

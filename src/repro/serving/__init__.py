@@ -1,4 +1,5 @@
 from repro.serving.generate import greedy_generate
 from repro.serving.kvcache import cache_from_prefill
+from repro.serving.weights import ParamStore
 
-__all__ = ["greedy_generate", "cache_from_prefill"]
+__all__ = ["greedy_generate", "cache_from_prefill", "ParamStore"]

@@ -62,6 +62,30 @@ def cache_from_prefill(
     return out
 
 
+def insert_prefill_rows(
+    cfg: ModelConfig, kind: str, layer_cache: dict, entry: dict,
+    rows: Sequence[int],
+) -> dict:
+    """Insert ONE layer's raw prefill cache ``entry`` into batch rows
+    ``rows`` of a decode buffer (ring-aligning KV to the buffer span).
+
+    The slot-insertion invariant lives here and only here: each newcomer's
+    FULL row is overwritten — KV beyond its prompt is zeroed, so no state
+    of an evicted sequence survives slot recycling.  Shared by the engine's
+    layer-major prefill and ``scatter_prefill_rows``.
+    """
+    rows = jnp.asarray(rows)
+    if kind == "attn":
+        span = layer_cache["k"].shape[1]
+        nk, nv = aligned_kv(cfg, entry["k"], entry["v"], span)
+        layer_cache["k"] = layer_cache["k"].at[rows].set(nk)
+        layer_cache["v"] = layer_cache["v"].at[rows].set(nv)
+    else:
+        for key in ("h", "conv"):
+            layer_cache[key] = layer_cache[key].at[rows].set(entry[key])
+    return layer_cache
+
+
 def scatter_prefill_rows(
     cfg: ModelConfig, cache: List, caches: List, rows: Sequence[int]
 ) -> List:
@@ -69,26 +93,16 @@ def scatter_prefill_rows(
 
     ``cache`` is the engine's per-layer (flattened over groups) buffer list;
     ``caches`` the raw ``model.prefill`` output for the newcomer micro-batch
-    (stacked over groups).  Each newcomer's FULL slot row is overwritten —
-    KV beyond its prompt is zeroed, so no state of an evicted sequence
-    survives slot recycling.
+    (stacked over groups).  See ``insert_prefill_rows`` for the invariant.
     """
     pattern = model_mod.layer_pattern(cfg)
     n_pat = len(pattern)
     G = len(cache) // n_pat
-    rows = jnp.asarray(rows)
     for g in range(G):
         for j, (kind, _) in enumerate(pattern):
             li = g * n_pat + j
             slot = jax.tree.map(lambda a: a[g], caches[j])
-            if kind == "attn":
-                span = cache[li]["k"].shape[1]
-                nk, nv = aligned_kv(cfg, slot["k"], slot["v"], span)
-                cache[li]["k"] = cache[li]["k"].at[rows].set(nk)
-                cache[li]["v"] = cache[li]["v"].at[rows].set(nv)
-            else:
-                for key in ("h", "conv"):
-                    cache[li][key] = cache[li][key].at[rows].set(slot[key])
+            cache[li] = insert_prefill_rows(cfg, kind, cache[li], slot, rows)
     return cache
 
 

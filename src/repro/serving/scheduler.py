@@ -37,9 +37,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import workload as W
 from repro.core.dag_builder import Plan
 from repro.core.engine import ModuleBatchingEngine
+from repro.core.hardware import HardwareProfile
 from repro.serving.kvcache import evict_rows
+from repro.serving.weights import ParamStore
 
 
 @dataclass
@@ -73,11 +76,19 @@ class ServeReport:
     decode_s: float = 0.0
     decode_slot_steps: int = 0    # decode steps x batch slots executed
     wasted_slot_steps: int = 0    # slot-steps spent on finished/empty slots
+    weight_htod_bytes: int = 0    # streamed weight bytes copied host->device
+    prefetch_wait_s: float = 0.0  # stall waiting on weight transfers
+    admission_deferrals: int = 0  # admissions blocked by the Eq. 2 KV budget
     _expert_dropped: int = 0      # drops counted outside BatchResults
 
     @property
     def total_s(self) -> float:
         return self.prefill_s + self.decode_s
+
+    @property
+    def htod_gb(self) -> float:
+        """Streamed weight traffic in GB (0 when everything is resident)."""
+        return self.weight_htod_bytes / 1e9
 
     @property
     def decode_tokens(self) -> int:
@@ -153,6 +164,12 @@ def serve_dataset(
     pad_id: int = 0,
     eos_id: Optional[int] = None,
     max_prompt_len: Optional[int] = None,
+    grouped_prefill: bool = True,
+    stream_weights: bool = False,
+    resident_bytes: Optional[float] = None,
+    prefetch: bool = True,
+    hw: Optional[HardwareProfile] = None,
+    store: Optional[ParamStore] = None,
 ) -> ServeReport:
     """Serve ``requests`` with ``plan.B`` batch slots.
 
@@ -162,11 +179,38 @@ def serve_dataset(
     ``eos_id`` finishes a sequence early.  ``expert_path`` selects the
     engine's MoE stage ('grouped' = one on-device dispatch per MoE layer,
     'loop' = the sequential per-expert oracle).
+
+    ``stream_weights=True`` executes through the streamed parameter store:
+    only the greedy ``resident_bytes`` set (default ``plan.s_params``) is
+    pinned on device, the rest is served through the engine's
+    double-buffered async prefetch (``prefetch=False`` degrades to
+    serialized fetches); transfer accounting lands in
+    ``ServeReport.htod_gb`` / ``prefetch_wait_s``.  A pre-built ``store``
+    overrides the residency arguments (one store is always shared by every
+    engine the scheduler creates).
+
+    ``hw`` enables memory-aware admission in the continuous scheduler:
+    a queued request is admitted only while every in-flight sequence's
+    offloaded KV/state (at its full prompt+decode extent) fits the Eq. 2
+    host budget (``m_c - S_Model``) — over-long prompts wait instead of
+    overflowing host memory (``ServeReport.admission_deferrals`` counts the
+    waits).  A request that could never fit raises ``ValueError``.
     """
     assert scheduler in ("static", "continuous"), scheduler
     report = ServeReport(scheduler=scheduler)
     if not requests:
         return report
+    if store is None:
+        # ONE store serves every engine (the static scheduler builds one
+        # engine per request chunk): the host copy of the streamed set and
+        # the residency split are made once, not per chunk
+        store = ParamStore.build(cfg, params, plan,
+                                 stream_weights=stream_weights,
+                                 resident_bytes=resident_bytes,
+                                 prefetch=prefetch)
+    engine_kw = dict(
+        expert_path=expert_path, grouped_prefill=grouped_prefill, store=store,
+    )
     dec = [max(1, int(r.decode_len or decode_len)) for r in requests]
     plens = [
         min(len(r.prompt), max_prompt_len) if max_prompt_len is not None
@@ -183,10 +227,10 @@ def serve_dataset(
                 )
     if scheduler == "static":
         _serve_static(cfg, params, requests, dec, plan, report, max_seq,
-                      expert_path, pad_id, eos_id, max_prompt_len)
+                      engine_kw, pad_id, eos_id, max_prompt_len)
     else:
         _serve_continuous(cfg, params, requests, dec, plan, report, max_seq,
-                          expert_path, pad_id, eos_id, max_prompt_len)
+                          engine_kw, pad_id, eos_id, max_prompt_len, hw)
     return report
 
 
@@ -194,7 +238,7 @@ def serve_dataset(
 # Static accumulated batches (paper §5.1)
 # ---------------------------------------------------------------------------
 def _serve_static(cfg, params, requests, dec, plan, report, max_seq,
-                  expert_path, pad_id, eos_id, max_prompt_len) -> None:
+                  engine_kw, pad_id, eos_id, max_prompt_len) -> None:
     B = max(1, plan.B)
     for lo in range(0, len(requests), B):
         chunk = requests[lo : lo + B]
@@ -205,7 +249,7 @@ def _serve_static(cfg, params, requests, dec, plan, report, max_seq,
         engine = ModuleBatchingEngine(
             cfg, params, plan,
             max_seq=max_seq or S + steps,
-            expert_path=expert_path,
+            **engine_kw,
         )
         t0 = time.perf_counter()
         logits = engine.prefill(jnp.asarray(prompts), lengths=lengths)
@@ -219,7 +263,9 @@ def _serve_static(cfg, params, requests, dec, plan, report, max_seq,
             toks.append(np.asarray(jnp.argmax(lg, axis=-1)))
             tick.append(time.perf_counter())
         t2 = tick[-1]
-        stats = engine.sync_stats()      # fold device-side drop counters in
+        stats = engine.sync_stats()      # fold device-side counters in
+        report.weight_htod_bytes += stats.weight_htod_bytes
+        report.prefetch_wait_s += stats.prefetch_wait_s
         mat = np.stack(toks, 1)                             # (b, steps)
         for i in range(b):
             out = _trim_eos(mat[i, : cdec[i]], eos_id)
@@ -243,7 +289,7 @@ def _serve_static(cfg, params, requests, dec, plan, report, max_seq,
 # Continuous in-flight batching (admission + eviction)
 # ---------------------------------------------------------------------------
 def _serve_continuous(cfg, params, requests, dec, plan, report, max_seq,
-                      expert_path, pad_id, eos_id, max_prompt_len) -> None:
+                      engine_kw, pad_id, eos_id, max_prompt_len, hw) -> None:
     # never allocate more slots than there are requests: every decode step
     # runs the full engine batch, so surplus slots would be pure waste
     B = max(1, min(plan.B, len(requests)))
@@ -252,8 +298,7 @@ def _serve_continuous(cfg, params, requests, dec, plan, report, max_seq,
         p = np.asarray(r.prompt, np.int32).reshape(-1)
         prompts.append(p[:max_prompt_len] if max_prompt_len is not None else p)
     M = max_seq or max(len(p) + d for p, d in zip(prompts, dec))
-    engine = ModuleBatchingEngine(cfg, params, plan, max_seq=M,
-                                  expert_path=expert_path)
+    engine = ModuleBatchingEngine(cfg, params, plan, max_seq=M, **engine_kw)
     engine.init_cache(B)
 
     queue = deque(range(len(requests)))
@@ -264,13 +309,38 @@ def _serve_continuous(cfg, params, requests, dec, plan, report, max_seq,
     admit_t = np.zeros(B)
     free = list(range(B))
 
+    # Eq. 2 admission budget: every in-flight sequence's offloaded KV/state
+    # at its FULL prompt+decode extent must fit m_c - S_Model (admitting on
+    # the worst case means a sequence can never outgrow the host mid-decode)
+    from repro.core.planner import host_kv_budget
+
+    kv_budget = None if hw is None else host_kv_budget(cfg, hw)
+    kv_need = [
+        W.kv_bytes_per_seq(cfg, len(p) + d) for p, d in zip(prompts, dec)
+    ]
+    if kv_budget is not None:
+        # fail BEFORE any work: a request whose KV can never fit would
+        # otherwise drain the queue for minutes and then raise mid-serve
+        for i, need in enumerate(kv_need):
+            if need > kv_budget:
+                raise ValueError(
+                    f"request {i}: KV/state bytes {need:.3e} can never fit "
+                    f"the Eq. 2 host budget {kv_budget:.3e} (host_mem - "
+                    f"model); truncate with max_prompt_len or shrink "
+                    f"decode_len"
+                )
+    live_kv = 0.0
+
     def finish(slot: int, now: float) -> None:
+        nonlocal live_kv
         report.request_results.append(RequestResult(
             index=int(slot_req[slot]),
             tokens=np.asarray(gen[slot], np.int32),
             latency_s=now - admit_t[slot],
             decode_steps=len(gen[slot]) - 1,
         ))
+        if kv_budget is not None:
+            live_kv -= kv_need[int(slot_req[slot])]
         slot_req[slot] = -1
         gen[slot] = []
         engine.cache = evict_rows(engine.cache, [slot])
@@ -279,11 +349,23 @@ def _serve_continuous(cfg, params, requests, dec, plan, report, max_seq,
     def admit() -> None:
         """Prefill queued requests into freed slots (one batched prefill per
         admission wave; insta-finishers — decode_len 1 / EOS on the first
-        token — free their slot again, so loop until stable)."""
+        token — free their slot again, so loop until stable).  With an
+        Eq. 2 budget, the queue head WAITS while its KV bytes don't fit
+        next to the in-flight sequences' (FIFO — later smaller requests are
+        not reordered past it)."""
+        nonlocal live_kv
         while free and queue:
-            take = min(len(free), len(queue))
-            slots = [free.pop(0) for _ in range(take)]
-            idxs = [queue.popleft() for _ in range(take)]
+            slots, idxs = [], []
+            while free and queue:
+                i = queue[0]
+                if kv_budget is not None and live_kv + kv_need[i] > kv_budget:
+                    break              # head waits for an eviction
+                queue.popleft()
+                slots.append(free.pop(0))
+                idxs.append(i)
+                live_kv += kv_need[i]
+            if not idxs:
+                break                  # nothing admissible this attempt
             batch = [Request(prompts[i], dec[i]) for i in idxs]
             ptoks, lens = pad_requests(batch, pad_id)
             t0 = time.perf_counter()
@@ -299,6 +381,11 @@ def _serve_continuous(cfg, params, requests, dec, plan, report, max_seq,
                 admit_t[s] = t0
                 if dec[i] <= 1 or (eos_id is not None and tk == eos_id):
                     finish(s, now)
+        # counted ONCE per admission attempt: the head is leaving this
+        # attempt memory-blocked despite a free slot
+        if (kv_budget is not None and queue and free
+                and live_kv + kv_need[queue[0]] > kv_budget):
+            report.admission_deferrals += 1
 
     admit()
     while (slot_req >= 0).any():
@@ -321,5 +408,8 @@ def _serve_continuous(cfg, params, requests, dec, plan, report, max_seq,
                 finish(int(s), now)
         admit()
 
-    report._expert_dropped += engine.sync_stats().expert_tokens_dropped
+    stats = engine.sync_stats()
+    report._expert_dropped += stats.expert_tokens_dropped
+    report.weight_htod_bytes += stats.weight_htod_bytes
+    report.prefetch_wait_s += stats.prefetch_wait_s
     report.request_results.sort(key=lambda r: r.index)

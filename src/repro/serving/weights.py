@@ -1,0 +1,223 @@
+"""Streamed parameter store: weight residency + double-buffered prefetch.
+
+The paper's headline mechanism (Fig. 6; ``S_Expert``/``S_Params`` in
+Table 2) is that expert weights live in HOST memory and are streamed
+device-ward on an htod channel that hides behind the grouped expert GEMM.
+``ParamStore`` is the executor side of that policy:
+
+* the **resident set** is pinned on device, greedily filled up to
+  ``Plan.s_params`` by ``core.workload.plan_residency`` — the SAME policy
+  the planner's cost model charges misses with, so the planner's predicted
+  overlap is measurable against the real engine.  Base weights
+  (embedding / final norm / lm_head) are always pinned; sequence mixers and
+  norms fill next, expert stacks last.
+* the **streamed set** is kept host-side (numpy — the pinned-host analogue
+  on this backend) and served through a bounded in-flight window of
+  ``prefetch_depth`` per-layer modules (the double buffer ``Plan.s_expert``
+  sizes): the engine issues ``prefetch(l+1)`` before launching layer *l*'s
+  grouped GEMM, so ``jax.device_put``'s async dispatch overlaps the copy
+  with compute; ``acquire(l)`` consumes the in-flight transfer (or fetches
+  on demand when prefetch is off — the streamed-serial baseline of the
+  ``weight_streaming`` benchmark).
+
+The store keeps device-side accounting (htod bytes at issue time, stall
+seconds at acquire time) that ``ModuleBatchingEngine.sync_stats`` folds
+into ``EngineStats`` and the scheduler surfaces as ``ServeReport.htod_gb``
+/ ``prefetch_wait_s``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import workload as W
+from repro.models import model as model_mod
+
+# per-layer module split: the streaming granularity.  'mixer' is
+# norm1 + attention/SSM; 'ffn' is norm2 + (MoE stacks + router | dense FFN).
+_MIXER_KEYS = ("norm1", "attn", "ssm")
+_FFN_KEYS = ("norm2", "moe", "ffn")
+
+
+def unstack_layers(cfg: ModelConfig, params: Dict) -> List[Tuple[str, str, Dict]]:
+    """Flatten group-stacked layer params into a per-layer list."""
+    pattern = model_mod.layer_pattern(cfg)
+    G = model_mod.num_groups(cfg)
+    layers = []
+    for g in range(G):
+        for j, (kind, ffn) in enumerate(pattern):
+            slot = jax.tree.map(lambda a: a[g], params["layers"][j])
+            layers.append((kind, ffn, slot))
+    return layers
+
+
+def _tree_bytes(tree) -> int:
+    return sum(int(np.prod(a.shape)) * a.dtype.itemsize
+               for a in jax.tree.leaves(tree))
+
+
+def _to_host(tree):
+    return jax.tree.map(np.asarray, tree)
+
+
+class ParamStore:
+    """Weight-residency subsystem the engine executes through.
+
+    ``resident_bytes=None`` pins everything on device (the default engine
+    behavior — streaming is opt-in).  Any finite budget realizes the greedy
+    ``workload.plan_residency`` split; ``resident_bytes=0`` streams every
+    per-layer module (base weights stay pinned).
+
+    ``prefetch=True`` is the overlapped mode: ``prefetch(l)`` issues the
+    async htod copy of layer *l*'s streamed modules into the in-flight
+    window ahead of use.  ``prefetch=False`` fetches on demand at
+    ``acquire`` — the serialized copy->compute baseline.
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: Dict,
+        resident_bytes: Optional[float] = None,
+        prefetch: bool = True,
+        prefetch_depth: int = 2,
+    ) -> None:
+        self.cfg = cfg
+        self.prefetch_enabled = prefetch
+        self.prefetch_depth = max(1, prefetch_depth)
+        self.residency = W.plan_residency(cfg, resident_bytes)
+        layers = unstack_layers(cfg, params)
+        self.schema: List[Tuple[str, str]] = [(k, f) for k, f, _ in layers]
+        # base params: always device-resident (embed / final_norm / lm_head)
+        self.base: Dict = {
+            k: v for k, v in params.items() if k != "layers"
+        }
+        # per-layer split into resident (device) and streamed (host) modules
+        self._resident: List[Dict[str, Dict]] = []
+        self._host: List[Dict[str, Dict]] = []
+        for li, (kind, ffn, slot) in enumerate(layers):
+            mixer = {k: v for k, v in slot.items() if k in _MIXER_KEYS}
+            ffnp = {k: v for k, v in slot.items() if k in _FFN_KEYS}
+            res: Dict[str, Dict] = {}
+            host: Dict[str, Dict] = {}
+            if self.residency.mixer_resident[li]:
+                res["mixer"] = mixer
+            else:
+                host["mixer"] = _to_host(mixer)
+            if ffnp:
+                if self.residency.ffn_resident[li]:
+                    res["ffn"] = ffnp
+                else:
+                    host["ffn"] = _to_host(ffnp)
+            self._resident.append(res)
+            self._host.append(host)
+        # in-flight prefetched transfers: (layer, module) -> device tree.
+        # Bounded at prefetch_depth layers — the double-buffer window.
+        self._inflight: Dict[int, Dict[str, Dict]] = {}
+        self._inflight_order: List[int] = []
+        # accounting (folded into EngineStats by engine.sync_stats)
+        self.htod_bytes = 0
+        self.prefetch_wait_s = 0.0
+        self.prefetch_issued = 0
+        self.demand_fetches = 0
+
+    @classmethod
+    def build(
+        cls,
+        cfg: ModelConfig,
+        params: Dict,
+        plan,
+        stream_weights: bool = False,
+        resident_bytes: Optional[float] = None,
+        prefetch: bool = True,
+    ) -> "ParamStore":
+        """THE budget-resolution policy, shared by the engine constructor
+        and the scheduler: everything resident unless ``stream_weights``;
+        the budget is the plan's ``s_params`` unless ``resident_bytes``
+        overrides it."""
+        budget = None
+        if stream_weights:
+            budget = plan.s_params if resident_bytes is None else resident_bytes
+        return cls(cfg, params, resident_bytes=budget, prefetch=prefetch)
+
+    # -- residency inspection -------------------------------------------
+    @property
+    def fully_resident(self) -> bool:
+        return all(not h for h in self._host)
+
+    def resident_module_bytes(self) -> int:
+        return _tree_bytes(self.base) + sum(
+            _tree_bytes(m) for res in self._resident for m in res.values()
+        )
+
+    def streamed_module_bytes(self) -> int:
+        return sum(_tree_bytes(m) for h in self._host for m in h.values())
+
+    def describe(self) -> str:
+        return (
+            f"resident {self.resident_module_bytes() / 1e9:.3f}GB "
+            f"(+{self.residency.n_streamed()} streamed modules, "
+            f"{self.streamed_module_bytes() / 1e9:.3f}GB host-side, "
+            f"window={self.prefetch_depth}, "
+            f"prefetch={'on' if self.prefetch_enabled else 'off'})"
+        )
+
+    # -- streaming -------------------------------------------------------
+    def _fetch(self, li: int) -> Dict[str, Dict]:
+        """Issue the async htod copy of layer ``li``'s streamed modules."""
+        fetched = {
+            name: jax.device_put(tree) for name, tree in self._host[li].items()
+        }
+        for tree in fetched.values():
+            self.htod_bytes += _tree_bytes(tree)
+        return fetched
+
+    def prefetch(self, li: int) -> None:
+        """Stage layer ``li``'s streamed modules into the in-flight window
+        (async; returns immediately).  Call BEFORE launching the previous
+        layer's compute so the copy hides behind it.  Wraps module indices,
+        so the last layer prefetches layer 0 for the next decode step."""
+        if not self.prefetch_enabled:
+            return
+        li = li % len(self.schema)
+        if not self._host[li] or li in self._inflight:
+            return
+        while len(self._inflight_order) >= self.prefetch_depth:
+            oldest = self._inflight_order.pop(0)
+            self._inflight.pop(oldest, None)
+        self._inflight[li] = self._fetch(li)
+        self._inflight_order.append(li)
+        self.prefetch_issued += 1
+
+    def acquire(self, li: int) -> Dict:
+        """Return layer ``li``'s full param dict with streamed modules on
+        device, consuming the in-flight prefetch (or fetching on demand).
+        The time spent waiting on the transfer — ideally ~0 when prefetch
+        overlapped it with compute — is accounted in ``prefetch_wait_s``."""
+        merged: Dict = {}
+        for tree in self._resident[li].values():
+            merged.update(tree)
+        if self._host[li]:
+            if li in self._inflight:
+                fetched = self._inflight.pop(li)
+                self._inflight_order.remove(li)
+            else:
+                fetched = self._fetch(li)
+                self.demand_fetches += 1
+            t0 = time.perf_counter()
+            jax.block_until_ready(fetched)
+            self.prefetch_wait_s += time.perf_counter() - t0
+            for tree in fetched.values():
+                merged.update(tree)
+        return merged
+
+    def take_counters(self) -> Tuple[int, float]:
+        """Drain (htod_bytes, prefetch_wait_s) since the last call."""
+        out = (self.htod_bytes, self.prefetch_wait_s)
+        self.htod_bytes = 0
+        self.prefetch_wait_s = 0.0
+        return out

@@ -53,6 +53,10 @@ class ShardCtx:
     # expert-parallel collective on a mesh; 'grouped' selects the
     # single-device capacity-bucketed grouped dispatch (the engine's path).
     moe_dispatch: str = "psum"
+    # per-expert capacity override for the grouped path (None: the
+    # capacity_factor-based default).  The engine's grouped prefill sets
+    # this to the micro-batch token count so no routed copy is dropped.
+    moe_capacity: Optional[int] = None
 
     @property
     def model_size(self) -> int:

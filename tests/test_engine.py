@@ -24,24 +24,34 @@ def _setup(arch):
 @pytest.mark.parametrize("arch", ["mixtral-8x7b", "olmoe-1b-7b",
                                   "mamba2-370m", "jamba-1.5-large-398b"])
 def test_engine_logits_match_reference(arch):
-    """Per-step logits equal the model-based reference (bf16 tolerance)."""
-    cfg, params, toks = _setup(arch)
+    """Per-step logits equal the model-based reference.
+
+    Runs in float32: the engine's per-layer module launches and the
+    reference's fused ``lax.scan`` reassociate bf16 reductions differently,
+    and in deep random-weight smoke models (jamba: 8 layers) that eps-level
+    noise is chaotically amplified through top-k routing flips.  f32 makes
+    the comparison tight (~1e-6), i.e. a STRICTER structural-equivalence
+    check; bf16 behavior is covered by the engine-vs-engine token-exactness
+    tests (ragged generate, grouped-vs-loop, streamed-vs-resident)."""
+    from dataclasses import replace
+
+    cfg = replace(get_config(arch, smoke=True), dtype="float32")
+    params = M.init_params(cfg, KEY)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab_size)
     lg_ref, caches = M.prefill(cfg, params, toks)
     cache = cache_from_prefill(cfg, caches, S, max_seq=S + DEC)
     eng = ModuleBatchingEngine(
         cfg, params, Plan(B=B, b_a=2, b_e=B, omega=0.0), max_seq=S + DEC
     )
     lg_eng = eng.prefill(toks)
-    scale = float(jnp.max(jnp.abs(lg_ref.astype(jnp.float32)))) + 1e-6
-    d0 = jnp.max(jnp.abs(lg_ref[:, 0].astype(jnp.float32) -
-                         lg_eng.astype(jnp.float32)))
-    assert float(d0) / scale < 0.05, d0
+    scale = float(jnp.max(jnp.abs(lg_ref))) + 1e-6
+    d0 = jnp.max(jnp.abs(lg_ref[:, 0] - lg_eng))
+    assert float(d0) / scale < 1e-4, d0
     nxt = jnp.argmax(lg_ref[:, 0], -1)
     lg2_ref, _ = M.decode_step(cfg, params, cache, nxt, jnp.int32(S))
     lg2_eng = eng.decode_step(nxt, S)
-    d1 = jnp.max(jnp.abs(lg2_ref.astype(jnp.float32) -
-                         lg2_eng.astype(jnp.float32)))
-    assert float(d1) / scale < 0.05, d1
+    d1 = jnp.max(jnp.abs(lg2_ref - lg2_eng))
+    assert float(d1) / scale < 1e-4, d1
 
 
 def test_engine_host_attention_path():

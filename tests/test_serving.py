@@ -246,6 +246,44 @@ def test_serving_kvcache_slot_insert_evict():
             assert not np.asarray(layer[key])[2].any(), key
 
 
+def test_continuous_admission_gated_by_host_kv_budget():
+    """Eq. 2 memory admission: with a host budget that fits only two
+    in-flight sequences, the continuous scheduler defers the queue head
+    until eviction frees KV bytes — same tokens, non-zero deferrals — and
+    a request that can NEVER fit raises instead of deadlocking."""
+    from dataclasses import replace as dc_replace
+
+    from repro.core import workload as W
+    from repro.core.dag_builder import Plan
+    from repro.core.hardware import A5000_C2
+    from repro.data.datasets import DatasetSpec, synthetic_requests
+    from repro.serving.scheduler import serve_dataset
+
+    cfg = get_config("mixtral-8x7b", smoke=True)
+    params = M.init_params(cfg, KEY)
+    reqs = synthetic_requests(DatasetSpec("mem", 5, 8, 4), cfg.vocab_size)
+    plan = Plan(B=3, b_a=2, b_e=8, omega=0.0)
+    need = W.kv_bytes_per_seq(cfg, 8 + 4)
+    hw = dc_replace(A5000_C2,
+                    host_mem_bytes=W.model_bytes(cfg) + 2.5 * need)
+    free_run = serve_dataset(cfg, params, reqs, plan, 4,
+                             scheduler="continuous")
+    gated = serve_dataset(cfg, params, reqs, plan, 4, scheduler="continuous",
+                          hw=hw)
+    assert gated.admission_deferrals > 0
+    assert free_run.admission_deferrals == 0
+    assert len(gated.request_results) == len(reqs)
+    for a, b in zip(free_run.request_results, gated.request_results):
+        assert a.index == b.index
+        assert np.array_equal(a.tokens, b.tokens), a.index
+    # a request whose KV can never fit must raise, not wait forever
+    hw_tiny = dc_replace(A5000_C2,
+                         host_mem_bytes=W.model_bytes(cfg) + 0.5 * need)
+    with pytest.raises(ValueError, match="Eq. 2"):
+        serve_dataset(cfg, params, reqs, plan, 4, scheduler="continuous",
+                      hw=hw_tiny)
+
+
 def test_scheduler_expert_path_choice():
     """serve_dataset surfaces the grouped-vs-loop engine choice and both
     paths serve identical tokens."""
