@@ -90,6 +90,55 @@ def scheduler_modes() -> Table:
     return t
 
 
+def online_arrivals() -> Table:
+    """Closed-loop drain vs open-loop Poisson arrivals (online serving).
+
+    The same mixed workload served by the continuous scheduler under the
+    offline protocol (every request due at t=0) and as an open-loop online
+    stream at a few Poisson rates.  At high rates the run converges to the
+    drain's throughput (arrivals never gate the batch); at low rates the
+    batch drains between arrivals, queue wait vanishes and TTFT approaches
+    pure prefill latency — throughput is paid for it.  TTFT percentiles
+    are measured arrival -> first token on the server's virtual clock.
+
+    CPU-smoke caveat: staggered arrivals admit waves of sizes the drain
+    run never sees, and each fresh (wave, pad) shape pays a one-time XLA
+    compile that lands in that request's TTFT — on real hardware with a
+    warmed serving process the rate sweep, not the compiles, dominates.
+    """
+    from repro.data.datasets import DatasetSpec, synthetic_requests
+    from repro.serving import arrivals
+    from repro.serving.scheduler import serve_dataset
+
+    t = Table("online_arrivals",
+              ["mode", "total_s", "decode_tok_per_s", "p50_ttft_s",
+               "p95_ttft_s", "mean_tpot_ms", "mean_queue_wait_s"])
+    cfg = get_config("mixtral-8x7b", smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    n = 8
+    make = lambda times: synthetic_requests(
+        DatasetSpec("online", n, 16, 16), cfg.vocab_size,
+        prompt_lens=[16, 9, 12], decode_lens=[6, 16, 24],
+        arrivals=times,
+    )
+    plan = Plan(B=4, b_a=4, b_e=64, omega=0.0)
+    # untimed warm-up: the runs share module-level jit caches, so without
+    # it the FIRST mode pays all XLA compilation and its TTFT is compile
+    # time, not serving latency
+    serve_dataset(cfg, params, make(None), plan, 16, scheduler="continuous")
+    runs = [("drain(closed-loop)", None)] + [
+        (f"poisson@{rate}rps", arrivals.poisson(n, rate, seed=0))
+        for rate in (8.0, 2.0, 0.5)
+    ]
+    for mode, times in runs:
+        rep = serve_dataset(cfg, params, make(times), plan, 16,
+                            scheduler="continuous")
+        t.add(mode, fmt(rep.total_s, 2), fmt(rep.decode_throughput),
+              fmt(rep.ttft_percentile(50), 3), fmt(rep.ttft_percentile(95), 3),
+              fmt(rep.mean_tpot_s * 1e3, 1), fmt(rep.mean_queue_wait_s, 3))
+    return t
+
+
 def weight_streaming() -> Table:
     """Resident vs streamed weight execution (the paper's S_Params policy).
 
@@ -154,4 +203,4 @@ def weight_streaming() -> Table:
     return t
 
 
-ALL = [engine_walltime, scheduler_modes, weight_streaming]
+ALL = [engine_walltime, scheduler_modes, online_arrivals, weight_streaming]

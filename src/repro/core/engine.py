@@ -488,24 +488,39 @@ class ModuleBatchingEngine:
                 self.stats.expert_tokens += int(r.size)
         return y
 
+    def decode_step_sampled(self, tokens: jax.Array, pos, sampler,
+                            slots=None) -> jax.Array:
+        """One decode tick plus on-device per-slot sampling: runs
+        ``decode_step`` and turns the logits into next tokens through a
+        ``serving.sampling.BatchSampler`` (mixed greedy/temperature/top-k
+        slots, seeded per slot — see that module's determinism contract).
+        Returns the (B,) next-token array instead of logits."""
+        return sampler.sample(self.decode_step(tokens, pos), slots)
+
     # -- generation -------------------------------------------------------
     def generate(
         self, tokens: jax.Array, decode_len: int, frontend_emb=None,
-        lengths=None,
+        lengths=None, sampling=None,
     ) -> jax.Array:
-        """Greedy generation (the paper's decoding strategy, §B).
+        """Generation — greedy by default (the paper's decoding strategy,
+        §B); pass ``sampling`` (a ``serving.sampling.SamplingParams``) for
+        seeded temperature / top-k decoding, applied uniformly with each
+        batch row's index folded into its key (rows draw independent
+        streams from one seed).
 
         ``lengths`` (B,) generates from a ragged right-padded batch: each
         sequence decodes at its own positions, token-for-token identical to
         generating it alone unpadded.
         """
+        from repro.serving.sampling import BatchSampler
+
         B, S = tokens.shape
+        sampler = BatchSampler.uniform(B, sampling)
         logits = self.prefill(tokens, frontend_emb, lengths=lengths)
-        out = [jnp.argmax(logits, axis=-1)]
+        out = [sampler.sample(logits)]
         base = S if lengths is None else jnp.asarray(lengths, jnp.int32)
         for t in range(decode_len - 1):
-            logits = self.decode_step(out[-1], base + t)
-            out.append(jnp.argmax(logits, axis=-1))
+            out.append(self.decode_step_sampled(out[-1], base + t, sampler))
         result = jnp.stack(out, axis=1)              # (B, decode_len)
         self.sync_stats()                            # fold device counters in
         return result

@@ -42,18 +42,26 @@ def synthetic_requests(
     seed: int = 0,
     prompt_lens: Sequence[int] | None = None,
     decode_lens: Sequence[int] | None = None,
+    arrivals: Sequence[float] | None = None,
+    sampling=None,
 ) -> List["Request"]:
     """Deterministic synthetic requests shaped like ``spec``.
 
     ``prompt_lens`` / ``decode_lens`` override the spec's uniform lengths
     with a cycled mixed-length workload (ragged prompts / in-flight decode
     lengths) — the shape the continuous scheduler exists for.
+
+    ``arrivals`` stamps per-request ``arrival_s`` offsets (an open-loop
+    online workload — see ``repro.serving.arrivals``; must cover every
+    request, it is not cycled).  ``sampling`` attaches one
+    ``SamplingParams`` decoding policy to every request (None = greedy).
     """
+    from repro.serving.arrivals import assign
     from repro.serving.scheduler import Request
 
     rng = np.random.default_rng(seed)
     n = min(spec.num_sequences, limit or spec.num_sequences)
-    return [
+    requests = [
         Request(
             prompt=rng.integers(
                 0, vocab_size,
@@ -65,9 +73,13 @@ def synthetic_requests(
                 decode_lens[i % len(decode_lens)] if decode_lens
                 else spec.decode_len
             ),
+            sampling=sampling,
         )
         for i in range(n)
     ]
+    if arrivals is not None:
+        assign(requests, arrivals)
+    return requests
 
 
 def synthetic_batches(

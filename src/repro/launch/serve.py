@@ -15,6 +15,8 @@ from repro.core.dag_builder import Plan
 from repro.core.hardware import PROFILES
 from repro.data.datasets import DatasetSpec, synthetic_requests
 from repro.models import model as M
+from repro.serving import arrivals
+from repro.serving.sampling import SamplingParams
 from repro.serving.scheduler import serve_dataset
 from repro.serving.weights import ParamStore
 
@@ -43,6 +45,19 @@ def main() -> None:
                          "over requests, e.g. 8,32,128")
     ap.add_argument("--eos-id", type=int, default=None,
                     help="token id that finishes a sequence early")
+    ap.add_argument("--arrival-rate", type=float, default=None,
+                    help="open-loop Poisson arrival rate (requests/s); "
+                         "default is the closed-loop drain (all due at t=0)")
+    ap.add_argument("--arrival-trace", default=None,
+                    help="comma-separated arrival offsets in seconds, e.g. "
+                         "0,0.5,1.2 (overrides --arrival-rate)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy, the default)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="restrict sampling to the k highest logits (0 = off)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="sampling seed (per-request streams are "
+                         "deterministic in it)")
     ap.add_argument("--stream-weights", action="store_true",
                     help="execute through the streamed parameter store: "
                          "weights beyond the resident budget stay host-side "
@@ -76,10 +91,20 @@ def main() -> None:
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     spec = DatasetSpec("serve", args.requests, args.prompt_len, args.decode_len)
     parse = lambda s: [int(x) for x in s.split(",")] if s else None
+    times = None
+    if args.arrival_trace:
+        times = arrivals.trace([float(x) for x in args.arrival_trace.split(",")])
+    elif args.arrival_rate is not None:
+        times = arrivals.poisson(args.requests, args.arrival_rate,
+                                 seed=args.seed)
+    sampling = SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                              seed=args.seed)
     requests = synthetic_requests(
         spec, cfg.vocab_size,
         prompt_lens=parse(args.prompt_lens),
         decode_lens=parse(args.decode_lens),
+        arrivals=times,
+        sampling=sampling if not sampling.is_greedy else None,
     )
     plan = Plan(
         B=args.batch,
@@ -119,6 +144,11 @@ def main() -> None:
           f"(wasted {report.wasted_slot_steps}, "
           f"occupancy {report.occupancy:.0%}); "
           f"mean request latency {report.mean_latency_s:.2f}s")
+    print(f"TTFT p50/p95: {report.ttft_percentile(50):.3f}/"
+          f"{report.ttft_percentile(95):.3f}s; "
+          f"TPOT p50/p95: {report.tpot_percentile(50)*1e3:.1f}/"
+          f"{report.tpot_percentile(95)*1e3:.1f}ms; "
+          f"mean queue wait {report.mean_queue_wait_s:.3f}s")
     if stream:
         print(f"weight streaming: {report.htod_gb:.3f}GB htod, "
               f"prefetch stall {report.prefetch_wait_s:.3f}s")

@@ -1,5 +1,38 @@
+"""Serving surface: the request-lifecycle server, offline wrapper, sampling,
+arrival processes, KV plumbing and the streamed parameter store."""
+from repro.serving import arrivals
 from repro.serving.generate import greedy_generate
 from repro.serving.kvcache import cache_from_prefill
+from repro.serving.sampling import BatchSampler, SamplingParams
+from repro.serving.scheduler import serve_dataset
+from repro.serving.server import (
+    BatchResult,
+    Request,
+    RequestHandle,
+    RequestResult,
+    ServeConfig,
+    Server,
+    ServeReport,
+    StreamConfig,
+    pad_requests,
+)
 from repro.serving.weights import ParamStore
 
-__all__ = ["greedy_generate", "cache_from_prefill", "ParamStore"]
+__all__ = [
+    "arrivals",
+    "BatchResult",
+    "BatchSampler",
+    "cache_from_prefill",
+    "greedy_generate",
+    "pad_requests",
+    "ParamStore",
+    "Request",
+    "RequestHandle",
+    "RequestResult",
+    "SamplingParams",
+    "serve_dataset",
+    "ServeConfig",
+    "Server",
+    "ServeReport",
+    "StreamConfig",
+]

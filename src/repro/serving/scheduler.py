@@ -1,155 +1,39 @@
-"""Inference scheduler: dataset -> module-batched engine, static or continuous.
+"""Back-compat scheduling surface over ``serving.server.Server``.
 
-Two scheduling modes over the same module-batching engine:
-
-* ``static`` — the paper's offline protocol (§5.1): slice the request set
-  into accumulated batches of ``B`` sequences, run each batch prefill +
-  decode to the batch's longest ``decode_len``.  Ragged prompts are
-  right-padded and masked (exact, see ``model.forward``); sequences that
-  finish early still occupy their slot until the batch drains (counted in
-  ``wasted_slot_steps``).
-
-* ``continuous`` — in-flight batching on top of module-based batching
-  (ROADMAP item; vLLM-style): when a sequence finishes (its ``decode_len``
-  reached, or EOS), its batch slot, KV-cache rows and SSM state are evicted
-  and immediately recycled — the next queued request is prefilled into the
-  freed slot (``engine.prefill_slots``) and rejoins the shared decode loop.
-  The accumulated batch stays *full*, not just large, which is what closes
-  the gap to the hardware limit on mixed-length workloads (MoE-Lens /
-  MoE-Lightning).
-
-Both modes honor per-request ``decode_len`` and — when the plan's expert
-capacity ``b_e`` admits every routed token (capacity drops depend on batch
-composition, which the two modes schedule differently) — produce identical
-tokens per request.  On mixed-length workloads with more requests than
-batch slots, the continuous mode executes strictly fewer decode-step·slot
-units (asserted in tests/test_serving.py); with the queue exhausted it
-degrades to static-like draining of the in-flight batch.
+The scheduler core lives in ``repro.serving.server``: one step-driven loop
+(``Server.step``) under two admission policies — ``static`` accumulated
+waves (paper §5.1) and ``continuous`` in-flight batching — with
+per-request ``SamplingParams``, open-loop arrivals, and request-lifecycle
+metrics (TTFT / TPOT / queue wait).  This module re-exports the request
+and report types from there and keeps ``serve_dataset`` as a thin
+offline-protocol wrapper so existing callers and tests are untouched.
 """
 from __future__ import annotations
 
-import time
-from collections import deque
-from dataclasses import dataclass, field
 from typing import List, Optional
 
-import jax.numpy as jnp
-import numpy as np
-
 from repro.configs.base import ModelConfig
-from repro.core import workload as W
 from repro.core.dag_builder import Plan
-from repro.core.engine import ModuleBatchingEngine
 from repro.core.hardware import HardwareProfile
-from repro.serving.kvcache import evict_rows
+from repro.serving.sampling import SamplingParams  # noqa: F401  (re-export)
+from repro.serving.server import (  # noqa: F401  (re-exports)
+    BatchResult,
+    Request,
+    RequestHandle,
+    RequestResult,
+    ServeConfig,
+    Server,
+    ServeReport,
+    StreamConfig,
+    pad_requests,
+)
 from repro.serving.weights import ParamStore
 
-
-@dataclass
-class Request:
-    prompt: np.ndarray            # (S,) int32
-    decode_len: int
-
-
-@dataclass
-class BatchResult:
-    tokens: np.ndarray            # (B, decode_len) raw batch tokens (static)
-    prefill_s: float
-    decode_s: float
-    expert_tokens_dropped: int = 0   # routed copies over the b_e capacity
-
-
-@dataclass
-class RequestResult:
-    index: int                    # position in the input request list
-    tokens: np.ndarray            # (n,) generated tokens (<= decode_len; EOS cut)
-    latency_s: float              # admission -> last token (incl. its prefill)
-    decode_steps: int             # decode steps while this request was live
-
-
-@dataclass
-class ServeReport:
-    results: List[BatchResult] = field(default_factory=list)
-    request_results: List[RequestResult] = field(default_factory=list)
-    scheduler: str = "static"
-    prefill_s: float = 0.0
-    decode_s: float = 0.0
-    decode_slot_steps: int = 0    # decode steps x batch slots executed
-    wasted_slot_steps: int = 0    # slot-steps spent on finished/empty slots
-    weight_htod_bytes: int = 0    # streamed weight bytes copied host->device
-    prefetch_wait_s: float = 0.0  # stall waiting on weight transfers
-    admission_deferrals: int = 0  # admissions blocked by the Eq. 2 KV budget
-    _expert_dropped: int = 0      # drops counted outside BatchResults
-
-    @property
-    def total_s(self) -> float:
-        return self.prefill_s + self.decode_s
-
-    @property
-    def htod_gb(self) -> float:
-        """Streamed weight traffic in GB (0 when everything is resident)."""
-        return self.weight_htod_bytes / 1e9
-
-    @property
-    def decode_tokens(self) -> int:
-        """Valid generated tokens (per-request decode_len / EOS honored)."""
-        return sum(r.tokens.size for r in self.request_results)
-
-    @property
-    def expert_tokens_dropped(self) -> int:
-        return self._expert_dropped + sum(
-            r.expert_tokens_dropped for r in self.results
-        )
-
-    @property
-    def decode_throughput(self) -> float:
-        return self.decode_tokens / self.decode_s if self.decode_s > 0 else 0.0
-
-    @property
-    def occupancy(self) -> float:
-        """Fraction of executed decode slot-steps that produced live tokens."""
-        if self.decode_slot_steps == 0:
-            return 1.0
-        return 1.0 - self.wasted_slot_steps / self.decode_slot_steps
-
-    @property
-    def mean_latency_s(self) -> float:
-        rr = self.request_results
-        return sum(r.latency_s for r in rr) / len(rr) if rr else 0.0
-
-
-def pad_requests(
-    requests: List[Request],
-    pad_id: int = 0,
-    max_prompt_len: Optional[int] = None,
-):
-    """Right-pad a request chunk to its longest prompt.
-
-    Prompts longer than ``max_prompt_len`` (when given) are truncated to it
-    first.  Returns ``(tokens (B, S), lengths (B,))`` — the lengths are what
-    make the padding exact downstream (prefill masks pads and gathers each
-    sequence's logits at its true last token).
-    """
-    prompts = []
-    for r in requests:
-        p = np.asarray(r.prompt, np.int32).reshape(-1)
-        if max_prompt_len is not None:
-            p = p[:max_prompt_len]
-        prompts.append(p)
-    lengths = np.asarray([len(p) for p in prompts], np.int32)
-    S = max(1, int(lengths.max())) if prompts else 1
-    out = np.full((len(requests), S), pad_id, np.int32)
-    for i, p in enumerate(prompts):
-        out[i, : len(p)] = p
-    return out, lengths
-
-
-def _trim_eos(tokens: np.ndarray, eos_id: Optional[int]) -> np.ndarray:
-    """Cut a token stream after (and including) the first EOS."""
-    if eos_id is None:
-        return tokens
-    hits = np.nonzero(tokens == eos_id)[0]
-    return tokens[: int(hits[0]) + 1] if hits.size else tokens
+__all__ = [
+    "BatchResult", "Request", "RequestHandle", "RequestResult",
+    "SamplingParams", "ServeConfig", "Server", "ServeReport", "StreamConfig",
+    "pad_requests", "serve_dataset",
+]
 
 
 def serve_dataset(
@@ -171,14 +55,22 @@ def serve_dataset(
     hw: Optional[HardwareProfile] = None,
     store: Optional[ParamStore] = None,
 ) -> ServeReport:
-    """Serve ``requests`` with ``plan.B`` batch slots.
+    """Serve a fixed request list to completion (the offline protocol).
 
-    ``scheduler`` selects static accumulated batches vs continuous in-flight
-    batching (see module docstring).  Per-request ``decode_len`` is honored
-    (``decode_len`` is the fallback for requests with a zero/None field);
-    ``eos_id`` finishes a sequence early.  ``expert_path`` selects the
-    engine's MoE stage ('grouped' = one on-device dispatch per MoE layer,
-    'loop' = the sequential per-expert oracle).
+    .. deprecated::
+        ``serve_dataset`` is a back-compat wrapper over
+        ``repro.serving.server.Server`` — new code should build a
+        ``Server`` with ``ServeConfig`` / ``StreamConfig`` and use
+        ``submit`` / ``step`` / ``run`` directly, which also opens online
+        arrivals (``Request.arrival_s``), per-request sampling
+        (``Request.sampling``), and streaming token callbacks.
+
+    ``scheduler`` selects static accumulated waves vs continuous in-flight
+    batching.  Per-request ``decode_len`` is honored (``decode_len`` is the
+    fallback for requests with a zero/None field); ``eos_id`` finishes a
+    sequence early.  ``expert_path`` selects the engine's MoE stage
+    ('grouped' = one on-device dispatch per MoE layer, 'loop' = the
+    sequential per-expert oracle).
 
     ``stream_weights=True`` executes through the streamed parameter store:
     only the greedy ``resident_bytes`` set (default ``plan.s_params``) is
@@ -197,219 +89,21 @@ def serve_dataset(
     waits).  A request that could never fit raises ``ValueError``.
     """
     assert scheduler in ("static", "continuous"), scheduler
-    report = ServeReport(scheduler=scheduler)
     if not requests:
-        return report
-    if store is None:
-        # ONE store serves every engine (the static scheduler builds one
-        # engine per request chunk): the host copy of the streamed set and
-        # the residency split are made once, not per chunk
-        store = ParamStore.build(cfg, params, plan,
-                                 stream_weights=stream_weights,
-                                 resident_bytes=resident_bytes,
-                                 prefetch=prefetch)
-    engine_kw = dict(
-        expert_path=expert_path, grouped_prefill=grouped_prefill, store=store,
+        return ServeReport(scheduler=scheduler)
+    server = Server(
+        cfg, params, plan,
+        serve=ServeConfig(
+            scheduler=scheduler, decode_len=decode_len, max_seq=max_seq,
+            max_prompt_len=max_prompt_len, pad_id=pad_id, eos_id=eos_id,
+            expert_path=expert_path, grouped_prefill=grouped_prefill, hw=hw,
+        ),
+        stream=StreamConfig(
+            stream_weights=stream_weights, resident_bytes=resident_bytes,
+            prefetch=prefetch,
+        ),
+        store=store,
     )
-    dec = [max(1, int(r.decode_len or decode_len)) for r in requests]
-    plens = [
-        min(len(r.prompt), max_prompt_len) if max_prompt_len is not None
-        else len(r.prompt)
-        for r in requests
-    ]
-    if max_seq is not None:
-        for i, (pl, d) in enumerate(zip(plens, dec)):
-            if pl + d > max_seq:
-                raise ValueError(
-                    f"request {i}: prompt length {pl} + decode_len {d} "
-                    f"exceeds the engine's max_seq={max_seq}; pass "
-                    f"max_prompt_len to truncate long prompts"
-                )
-    if scheduler == "static":
-        _serve_static(cfg, params, requests, dec, plan, report, max_seq,
-                      engine_kw, pad_id, eos_id, max_prompt_len)
-    else:
-        _serve_continuous(cfg, params, requests, dec, plan, report, max_seq,
-                          engine_kw, pad_id, eos_id, max_prompt_len, hw)
-    return report
-
-
-# ---------------------------------------------------------------------------
-# Static accumulated batches (paper §5.1)
-# ---------------------------------------------------------------------------
-def _serve_static(cfg, params, requests, dec, plan, report, max_seq,
-                  engine_kw, pad_id, eos_id, max_prompt_len) -> None:
-    B = max(1, plan.B)
-    for lo in range(0, len(requests), B):
-        chunk = requests[lo : lo + B]
-        cdec = dec[lo : lo + B]
-        prompts, lengths = pad_requests(chunk, pad_id, max_prompt_len)
-        b, S = prompts.shape
-        steps = max(cdec)
-        engine = ModuleBatchingEngine(
-            cfg, params, plan,
-            max_seq=max_seq or S + steps,
-            **engine_kw,
-        )
-        t0 = time.perf_counter()
-        logits = engine.prefill(jnp.asarray(prompts), lengths=lengths)
-        logits.block_until_ready()
-        t1 = time.perf_counter()
-        toks = [np.asarray(jnp.argmax(logits, axis=-1))]
-        tick = [t1]                        # wall time after each token column
-        pos = jnp.asarray(lengths)
-        for t in range(steps - 1):
-            lg = engine.decode_step(jnp.asarray(toks[-1]), pos + t)
-            toks.append(np.asarray(jnp.argmax(lg, axis=-1)))
-            tick.append(time.perf_counter())
-        t2 = tick[-1]
-        stats = engine.sync_stats()      # fold device-side counters in
-        report.weight_htod_bytes += stats.weight_htod_bytes
-        report.prefetch_wait_s += stats.prefetch_wait_s
-        mat = np.stack(toks, 1)                             # (b, steps)
-        for i in range(b):
-            out = _trim_eos(mat[i, : cdec[i]], eos_id)
-            report.request_results.append(RequestResult(
-                index=lo + i,
-                tokens=out,
-                latency_s=tick[out.size - 1] - t0,
-                decode_steps=steps - 1,
-            ))
-        useful = sum(r.tokens.size - 1 for r in report.request_results[-b:])
-        report.decode_slot_steps += b * (steps - 1)
-        report.wasted_slot_steps += b * (steps - 1) - useful
-        report.prefill_s += t1 - t0
-        report.decode_s += t2 - t1
-        report.results.append(
-            BatchResult(mat, t1 - t0, t2 - t1, stats.expert_tokens_dropped)
-        )
-
-
-# ---------------------------------------------------------------------------
-# Continuous in-flight batching (admission + eviction)
-# ---------------------------------------------------------------------------
-def _serve_continuous(cfg, params, requests, dec, plan, report, max_seq,
-                      engine_kw, pad_id, eos_id, max_prompt_len, hw) -> None:
-    # never allocate more slots than there are requests: every decode step
-    # runs the full engine batch, so surplus slots would be pure waste
-    B = max(1, min(plan.B, len(requests)))
-    prompts = []
     for r in requests:
-        p = np.asarray(r.prompt, np.int32).reshape(-1)
-        prompts.append(p[:max_prompt_len] if max_prompt_len is not None else p)
-    M = max_seq or max(len(p) + d for p, d in zip(prompts, dec))
-    engine = ModuleBatchingEngine(cfg, params, plan, max_seq=M, **engine_kw)
-    engine.init_cache(B)
-
-    queue = deque(range(len(requests)))
-    slot_req = np.full(B, -1)             # request index per slot (-1 = free)
-    pos = np.zeros(B, np.int64)           # next decode position per slot
-    cur = np.zeros(B, np.int32)           # last emitted token per slot
-    gen: List[List[int]] = [[] for _ in range(B)]
-    admit_t = np.zeros(B)
-    free = list(range(B))
-
-    # Eq. 2 admission budget: every in-flight sequence's offloaded KV/state
-    # at its FULL prompt+decode extent must fit m_c - S_Model (admitting on
-    # the worst case means a sequence can never outgrow the host mid-decode)
-    from repro.core.planner import host_kv_budget
-
-    kv_budget = None if hw is None else host_kv_budget(cfg, hw)
-    kv_need = [
-        W.kv_bytes_per_seq(cfg, len(p) + d) for p, d in zip(prompts, dec)
-    ]
-    if kv_budget is not None:
-        # fail BEFORE any work: a request whose KV can never fit would
-        # otherwise drain the queue for minutes and then raise mid-serve
-        for i, need in enumerate(kv_need):
-            if need > kv_budget:
-                raise ValueError(
-                    f"request {i}: KV/state bytes {need:.3e} can never fit "
-                    f"the Eq. 2 host budget {kv_budget:.3e} (host_mem - "
-                    f"model); truncate with max_prompt_len or shrink "
-                    f"decode_len"
-                )
-    live_kv = 0.0
-
-    def finish(slot: int, now: float) -> None:
-        nonlocal live_kv
-        report.request_results.append(RequestResult(
-            index=int(slot_req[slot]),
-            tokens=np.asarray(gen[slot], np.int32),
-            latency_s=now - admit_t[slot],
-            decode_steps=len(gen[slot]) - 1,
-        ))
-        if kv_budget is not None:
-            live_kv -= kv_need[int(slot_req[slot])]
-        slot_req[slot] = -1
-        gen[slot] = []
-        engine.cache = evict_rows(engine.cache, [slot])
-        free.append(slot)
-
-    def admit() -> None:
-        """Prefill queued requests into freed slots (one batched prefill per
-        admission wave; insta-finishers — decode_len 1 / EOS on the first
-        token — free their slot again, so loop until stable).  With an
-        Eq. 2 budget, the queue head WAITS while its KV bytes don't fit
-        next to the in-flight sequences' (FIFO — later smaller requests are
-        not reordered past it)."""
-        nonlocal live_kv
-        while free and queue:
-            slots, idxs = [], []
-            while free and queue:
-                i = queue[0]
-                if kv_budget is not None and live_kv + kv_need[i] > kv_budget:
-                    break              # head waits for an eviction
-                queue.popleft()
-                slots.append(free.pop(0))
-                idxs.append(i)
-                live_kv += kv_need[i]
-            if not idxs:
-                break                  # nothing admissible this attempt
-            batch = [Request(prompts[i], dec[i]) for i in idxs]
-            ptoks, lens = pad_requests(batch, pad_id)
-            t0 = time.perf_counter()
-            lg = engine.prefill_slots(jnp.asarray(ptoks), slots, lengths=lens)
-            tok0 = np.asarray(jnp.argmax(lg, axis=-1))
-            now = time.perf_counter()
-            report.prefill_s += now - t0
-            for s, i, tk, ln in zip(slots, idxs, tok0, lens):
-                slot_req[s] = i
-                pos[s] = int(ln)
-                cur[s] = tk
-                gen[s] = [int(tk)]
-                admit_t[s] = t0
-                if dec[i] <= 1 or (eos_id is not None and tk == eos_id):
-                    finish(s, now)
-        # counted ONCE per admission attempt: the head is leaving this
-        # attempt memory-blocked despite a free slot
-        if (kv_budget is not None and queue and free
-                and live_kv + kv_need[queue[0]] > kv_budget):
-            report.admission_deferrals += 1
-
-    admit()
-    while (slot_req >= 0).any():
-        active = slot_req >= 0
-        t0 = time.perf_counter()
-        lg = engine.decode_step(
-            jnp.asarray(cur), jnp.asarray(np.minimum(pos, M - 1))
-        )
-        nxt = np.asarray(jnp.argmax(lg, axis=-1))
-        now = time.perf_counter()
-        report.decode_s += now - t0
-        report.decode_slot_steps += B
-        report.wasted_slot_steps += int(B - active.sum())
-        for s in np.nonzero(active)[0]:
-            gen[s].append(int(nxt[s]))
-            cur[s] = nxt[s]
-            pos[s] += 1
-            i = slot_req[s]
-            if len(gen[s]) >= dec[i] or (eos_id is not None and nxt[s] == eos_id):
-                finish(int(s), now)
-        admit()
-
-    stats = engine.sync_stats()
-    report._expert_dropped += stats.expert_tokens_dropped
-    report.weight_htod_bytes += stats.weight_htod_bytes
-    report.prefetch_wait_s += stats.prefetch_wait_s
-    report.request_results.sort(key=lambda r: r.index)
+        server.submit(r)
+    return server.run()

@@ -1,0 +1,676 @@
+"""Request-lifecycle serving: one step-driven core under both schedulers.
+
+``Server`` is the serving facade over ``ModuleBatchingEngine`` +
+``ParamStore``: requests are submitted (``submit(Request) ->
+RequestHandle``), become admissible at their ``arrival_s`` offset on a
+virtual clock keyed off wall time, and are driven by ``step()`` — ONE
+module-batched decode tick that admits due arrivals, decodes every live
+slot, samples each slot under its own ``SamplingParams``, and
+evicts/recycles finished sequences.  ``run()`` loops ``step()`` (sleeping
+through idle gaps until the next arrival) and returns the ``ServeReport``.
+
+The two scheduler modes are thin *admission policies* over that single
+core — the prefill/decode/EOS/latency bookkeeping lives once:
+
+* ``static`` — the paper's offline protocol (§5.1): requests are admitted
+  in waves, a new wave only when the previous one has fully drained; every
+  wave slot keeps stepping until the wave's slowest member finishes
+  (early finishers are counted in ``wasted_slot_steps``), and each wave's
+  raw token matrix is recorded as a ``BatchResult``.
+* ``continuous`` — in-flight batching (vLLM-style): a finished sequence's
+  slot, KV rows and SSM state are evicted immediately and the freed slot
+  is recycled by prefilling the next due request into it; with
+  ``ServeConfig.hw`` set, admission is additionally gated by the Eq. 2
+  host KV budget (the queue head waits, FIFO, counted in
+  ``admission_deferrals``).
+
+Both modes produce identical tokens per request when the plan's expert
+capacity ``b_e`` admits every routed token (capacity drops depend on batch
+composition, which the modes schedule differently), and the sampling
+determinism contract (see ``serving.sampling``) makes that hold for
+seeded sampled requests too.
+
+Per-request latency metrics are measured on the virtual clock:
+``queue_wait_s`` (arrival -> admission), ``ttft_s`` (arrival -> first
+token, which the admission prefill produces), and ``tpot_s`` (mean
+per-token latency after the first).
+"""
+from __future__ import annotations
+
+import heapq
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterator, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import workload as W
+from repro.core.dag_builder import Plan
+from repro.core.hardware import HardwareProfile
+from repro.serving.kvcache import evict_rows
+from repro.serving.sampling import BatchSampler, SamplingParams
+from repro.serving.weights import ParamStore
+
+
+# ---------------------------------------------------------------------------
+# Requests, configs, results
+# ---------------------------------------------------------------------------
+@dataclass
+class Request:
+    prompt: np.ndarray            # (S,) int32
+    decode_len: int
+    arrival_s: float = 0.0        # admissible-from offset on the virtual clock
+    sampling: Optional[SamplingParams] = None   # None = greedy
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    """Scheduling-side knobs, frozen (was: the ``serve_dataset`` kwarg
+    sprawl).  ``decode_len`` is the fallback for requests whose own field
+    is zero/None; ``hw`` enables Eq. 2 memory-gated admission in the
+    continuous scheduler."""
+
+    scheduler: str = "static"
+    decode_len: int = 32
+    max_seq: Optional[int] = None
+    max_prompt_len: Optional[int] = None
+    pad_id: int = 0
+    eos_id: Optional[int] = None
+    expert_path: str = "grouped"
+    grouped_prefill: bool = True
+    hw: Optional[HardwareProfile] = None
+
+    def __post_init__(self) -> None:
+        assert self.scheduler in ("static", "continuous"), self.scheduler
+        assert self.expert_path in ("grouped", "loop"), self.expert_path
+
+
+@dataclass(frozen=True)
+class StreamConfig:
+    """Weight-residency knobs for the ``ParamStore`` the server builds
+    (ignored when a pre-built ``store`` is passed)."""
+
+    stream_weights: bool = False
+    resident_bytes: Optional[float] = None
+    prefetch: bool = True
+
+
+@dataclass
+class BatchResult:
+    tokens: np.ndarray            # (B, decode_len) raw batch tokens (static)
+    prefill_s: float
+    decode_s: float
+    expert_tokens_dropped: int = 0   # routed copies over the b_e capacity
+
+
+@dataclass
+class RequestResult:
+    index: int                    # position in the input request list
+    tokens: np.ndarray            # (n,) generated tokens (<= decode_len; EOS cut)
+    latency_s: float              # admission -> last token (incl. its prefill)
+    decode_steps: int             # decode steps while this request was live
+    arrival_s: float = 0.0        # admissible-from offset (virtual clock)
+    queue_wait_s: float = 0.0     # arrival -> admission
+    ttft_s: float = 0.0           # arrival -> first token
+    tpot_s: float = 0.0           # mean per-token latency after the first
+
+
+@dataclass
+class ServeReport:
+    results: List[BatchResult] = field(default_factory=list)
+    request_results: List[RequestResult] = field(default_factory=list)
+    scheduler: str = "static"
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    decode_slot_steps: int = 0    # decode steps x batch slots executed
+    wasted_slot_steps: int = 0    # slot-steps spent on finished/empty slots
+    weight_htod_bytes: int = 0    # streamed weight bytes copied host->device
+    prefetch_wait_s: float = 0.0  # stall waiting on weight transfers
+    admission_deferrals: int = 0  # admissions blocked by the Eq. 2 KV budget
+    _expert_dropped: int = 0      # drops counted outside BatchResults
+
+    @property
+    def total_s(self) -> float:
+        return self.prefill_s + self.decode_s
+
+    @property
+    def htod_gb(self) -> float:
+        """Streamed weight traffic in GB (0 when everything is resident)."""
+        return self.weight_htod_bytes / 1e9
+
+    @property
+    def decode_tokens(self) -> int:
+        """Valid generated tokens (per-request decode_len / EOS honored)."""
+        return sum(r.tokens.size for r in self.request_results)
+
+    @property
+    def expert_tokens_dropped(self) -> int:
+        return self._expert_dropped + sum(
+            r.expert_tokens_dropped for r in self.results
+        )
+
+    @property
+    def decode_throughput(self) -> float:
+        return self.decode_tokens / self.decode_s if self.decode_s > 0 else 0.0
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of executed decode slot-steps that produced live tokens."""
+        if self.decode_slot_steps == 0:
+            return 1.0
+        return 1.0 - self.wasted_slot_steps / self.decode_slot_steps
+
+    @property
+    def mean_latency_s(self) -> float:
+        rr = self.request_results
+        return sum(r.latency_s for r in rr) / len(rr) if rr else 0.0
+
+    @property
+    def mean_queue_wait_s(self) -> float:
+        rr = self.request_results
+        return sum(r.queue_wait_s for r in rr) / len(rr) if rr else 0.0
+
+    @property
+    def mean_ttft_s(self) -> float:
+        rr = self.request_results
+        return sum(r.ttft_s for r in rr) / len(rr) if rr else 0.0
+
+    @property
+    def mean_tpot_s(self) -> float:
+        rr = self.request_results
+        return sum(r.tpot_s for r in rr) / len(rr) if rr else 0.0
+
+    def ttft_percentile(self, q: float) -> float:
+        rr = self.request_results
+        return float(np.percentile([r.ttft_s for r in rr], q)) if rr else 0.0
+
+    def tpot_percentile(self, q: float) -> float:
+        rr = self.request_results
+        return float(np.percentile([r.tpot_s for r in rr], q)) if rr else 0.0
+
+
+def pad_requests(requests, pad_id: int = 0,
+                 max_prompt_len: Optional[int] = None):
+    """Right-pad a request chunk to its longest prompt.
+
+    Prompts longer than ``max_prompt_len`` (when given) are truncated to it
+    first.  Returns ``(tokens (B, S), lengths (B,))`` — the lengths are what
+    make the padding exact downstream (prefill masks pads and gathers each
+    sequence's logits at its true last token).
+    """
+    prompts = []
+    for r in requests:
+        p = np.asarray(r.prompt, np.int32).reshape(-1)
+        if max_prompt_len is not None:
+            p = p[:max_prompt_len]
+        prompts.append(p)
+    lengths = np.asarray([len(p) for p in prompts], np.int32)
+    S = max(1, int(lengths.max())) if prompts else 1
+    out = np.full((len(requests), S), pad_id, np.int32)
+    for i, p in enumerate(prompts):
+        out[i, : len(p)] = p
+    return out, lengths
+
+
+# ---------------------------------------------------------------------------
+# Request lifecycle
+# ---------------------------------------------------------------------------
+class RequestHandle:
+    """A submitted request's live view: status, the token stream as it is
+    produced, and the timing marks the metrics derive from.
+
+    Streaming: pass ``on_token=`` to ``Server.submit`` for a synchronous
+    per-token callback, or iterate ``handle.stream()`` — the iterator
+    drives ``Server.step()`` until the next token (or the end of the
+    stream) is available.
+    """
+
+    def __init__(self, server: "Server", index: int, request: Request,
+                 prompt: np.ndarray, decode_len: int,
+                 on_token: Optional[Callable] = None) -> None:
+        self._server = server
+        self.index = index
+        self.request = request
+        self.prompt = prompt              # truncated to max_prompt_len
+        self.decode_len = decode_len      # resolved fallback applied
+        self.sampling = request.sampling
+        self.arrival_s = float(request.arrival_s or 0.0)
+        self.on_token = on_token
+        self.status = "queued"            # queued -> running -> finished
+        self.tokens: List[int] = []
+        self.admit_s = float("nan")
+        self.first_token_s = float("nan")
+        self.finish_s = float("nan")
+        self.decode_steps = 0
+
+    @property
+    def finished(self) -> bool:
+        return self.status == "finished"
+
+    def _emit(self, token: int) -> None:
+        self.tokens.append(token)
+        if self.on_token is not None:
+            self.on_token(self, token)
+
+    def stream(self) -> Iterator[int]:
+        """Yield tokens as they are produced, driving the server forward."""
+        sent = 0
+        while True:
+            while sent < len(self.tokens):
+                yield self.tokens[sent]
+                sent += 1
+            if self.finished:
+                return
+            self._server._wait_for_arrival()
+            self._server.step()
+
+    def result(self) -> RequestResult:
+        assert self.finished, f"request {self.index} is {self.status}"
+        n = len(self.tokens)
+        return RequestResult(
+            index=self.index,
+            tokens=np.asarray(self.tokens, np.int32),
+            latency_s=self.finish_s - self.admit_s,
+            decode_steps=self.decode_steps,
+            arrival_s=self.arrival_s,
+            queue_wait_s=self.admit_s - self.arrival_s,
+            ttft_s=self.first_token_s - self.arrival_s,
+            tpot_s=(self.finish_s - self.first_token_s) / max(1, n - 1),
+        )
+
+
+# ---------------------------------------------------------------------------
+# The server
+# ---------------------------------------------------------------------------
+class Server:
+    """Facade over ``ModuleBatchingEngine`` + ``ParamStore``: submit
+    requests, drive them with ``step()`` / ``run()``, read the report.
+
+    The engine (and its ``plan.B``-slot cache) is built lazily at the first
+    step, sized ``min(plan.B, submitted requests)`` — submit the initial
+    workload before stepping so the batch is not over-allocated.  Requests
+    submitted later join the queue and reuse the existing slots; their
+    prompt+decode extent must fit the realized ``max_seq``.
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: Dict,
+        plan: Plan,
+        serve: ServeConfig = ServeConfig(),
+        stream: StreamConfig = StreamConfig(),
+        store: Optional[ParamStore] = None,
+    ) -> None:
+        self.cfg = cfg
+        self.params = params
+        self.plan = plan
+        self.serve = serve
+        self.stream = stream
+        self.report = ServeReport(scheduler=serve.scheduler)
+        self._store = store
+        self._engine = None               # ModuleBatchingEngine, built lazily
+        self._sampler: Optional[BatchSampler] = None
+        self._handles: List[RequestHandle] = []
+        self._pending: List = []          # heap of (arrival_s, index, handle)
+        self._t0: Optional[float] = None
+        self._max_seq: Optional[int] = serve.max_seq
+        # engine-stat totals already drained into the report
+        self._seen = {"drop": 0, "htod": 0, "wait": 0.0}
+        # Eq. 2 admission budget (continuous): every in-flight sequence's
+        # offloaded KV/state at its FULL prompt+decode extent must fit
+        # m_c - S_Model, so a sequence can never outgrow the host mid-decode
+        self._kv_budget = (
+            None if serve.hw is None or serve.scheduler != "continuous"
+            else _host_kv_budget(cfg, serve.hw)
+        )
+        self._kv_need: Dict[int, float] = {}
+        self._live_kv = 0.0
+        # slot state (allocated with the engine)
+        self._b = 0
+        self._free: deque = deque()
+        self._slot_handle: List[Optional[RequestHandle]] = []
+        self._cur: Optional[np.ndarray] = None
+        self._pos: Optional[np.ndarray] = None
+        self._wave: Optional[Dict] = None     # static policy's in-flight wave
+
+    # -- lifecycle: submit -------------------------------------------------
+    def submit(self, request: Request,
+               on_token: Optional[Callable] = None) -> RequestHandle:
+        """Queue a request; it becomes admissible at ``request.arrival_s``.
+
+        Raises ``ValueError`` immediately for a request that could never be
+        served: prompt+decode beyond ``max_seq``, or (continuous with
+        ``hw``) KV/state that can never fit the Eq. 2 host budget.
+        """
+        serve = self.serve
+        prompt = np.asarray(request.prompt, np.int32).reshape(-1)
+        if serve.max_prompt_len is not None:
+            prompt = prompt[: serve.max_prompt_len]
+        dec = max(1, int(request.decode_len or serve.decode_len))
+        i = len(self._handles)
+        arrival = float(request.arrival_s or 0.0)
+        if not np.isfinite(arrival) or arrival < 0:
+            # a NaN head would never compare due and the server would spin
+            raise ValueError(
+                f"request {i}: arrival_s must be finite and >= 0, "
+                f"got {request.arrival_s!r}"
+            )
+        limit = self._max_seq
+        if limit is not None and len(prompt) + dec > limit:
+            raise ValueError(
+                f"request {i}: prompt length {len(prompt)} + decode_len "
+                f"{dec} exceeds the engine's max_seq={limit}; pass "
+                f"max_prompt_len to truncate long prompts"
+            )
+        if self._kv_budget is not None:
+            need = W.kv_bytes_per_seq(self.cfg, len(prompt) + dec)
+            if need > self._kv_budget:
+                raise ValueError(
+                    f"request {i}: KV/state bytes {need:.3e} can never fit "
+                    f"the Eq. 2 host budget {self._kv_budget:.3e} (host_mem "
+                    f"- model); truncate with max_prompt_len or shrink "
+                    f"decode_len"
+                )
+            self._kv_need[i] = need
+        h = RequestHandle(self, i, request, prompt, dec, on_token)
+        self._handles.append(h)
+        heapq.heappush(self._pending, (h.arrival_s, i, h))
+        return h
+
+    # -- clock -------------------------------------------------------------
+    def _now(self) -> float:
+        """Virtual clock: seconds since the first step (arrivals are
+        offsets on this clock)."""
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+        return time.perf_counter() - self._t0
+
+    @property
+    def next_arrival_s(self) -> Optional[float]:
+        return self._pending[0][0] if self._pending else None
+
+    def _wait_for_arrival(self) -> None:
+        """Sleep until the next queued arrival when nothing is live."""
+        if self._any_live() or not self._pending:
+            return
+        dt = self.next_arrival_s - self._now()
+        if dt > 0:
+            time.sleep(min(dt, 0.05))
+
+    # -- engine ------------------------------------------------------------
+    def _ensure_engine(self) -> None:
+        if self._engine is not None:
+            return
+        # imported here: core.engine itself imports serving.weights, so a
+        # top-level import would cycle through the serving package __init__
+        from repro.core.engine import ModuleBatchingEngine
+
+        if self._store is None:
+            st = self.stream
+            self._store = ParamStore.build(
+                self.cfg, self.params, self.plan,
+                stream_weights=st.stream_weights,
+                resident_bytes=st.resident_bytes, prefetch=st.prefetch,
+            )
+        self._b = max(1, min(self.plan.B, len(self._handles) or 1))
+        if self._max_seq is None:
+            self._max_seq = max(
+                len(h.prompt) + h.decode_len for h in self._handles
+            )
+        self._engine = ModuleBatchingEngine(
+            self.cfg, self.params, self.plan, max_seq=self._max_seq,
+            expert_path=self.serve.expert_path,
+            grouped_prefill=self.serve.grouped_prefill, store=self._store,
+        )
+        self._engine.init_cache(self._b)
+        self._sampler = BatchSampler(self._b)
+        self._free = deque(range(self._b))
+        self._slot_handle = [None] * self._b
+        self._cur = np.zeros(self._b, np.int32)
+        self._pos = np.zeros(self._b, np.int64)
+
+    def _drain_engine_stats(self) -> int:
+        """Fold the engine's cumulative counters into the report (deltas
+        since the last drain); returns the expert-drop delta."""
+        if self._engine is None:
+            return 0
+        st = self._engine.sync_stats()
+        d_drop = st.expert_tokens_dropped - self._seen["drop"]
+        self.report.weight_htod_bytes += st.weight_htod_bytes - self._seen["htod"]
+        self.report.prefetch_wait_s += st.prefetch_wait_s - self._seen["wait"]
+        self._seen = {"drop": st.expert_tokens_dropped,
+                      "htod": st.weight_htod_bytes,
+                      "wait": st.prefetch_wait_s}
+        return d_drop
+
+    # -- the step-driven core ---------------------------------------------
+    def _any_live(self) -> bool:
+        return any(h is not None for h in self._slot_handle)
+
+    def has_work(self) -> bool:
+        return self._any_live() or bool(self._pending)
+
+    def step(self) -> bool:
+        """One scheduler tick: admit due arrivals (policy-dependent), run
+        one module-batched decode step over every slot, sample each live
+        slot under its own ``SamplingParams``, finish/evict/recycle.
+        Returns True while work remains (live slots or queued requests);
+        with only future arrivals pending it returns True without
+        decoding — ``run()`` sleeps through such gaps, manual steppers can
+        watch ``next_arrival_s``.
+        """
+        if not self.has_work():
+            return False
+        self._ensure_engine()
+        self._admit()
+        if self._any_live():
+            self._decode_tick()
+        return self.has_work()
+
+    def run(self, until_idle: bool = True) -> ServeReport:
+        """Drive ``step()`` to completion and return the report.
+
+        ``until_idle=False`` stops at the first moment nothing is live or
+        due (future arrivals are left queued) instead of sleeping for them.
+        """
+        while self.step():
+            if not self._any_live() and self._pending:
+                if not until_idle and self.next_arrival_s > self._now():
+                    break
+                self._wait_for_arrival()
+        return self.finalize()
+
+    def finalize(self) -> ServeReport:
+        """Drain engine counters and order results; idempotent."""
+        self.report._expert_dropped += self._drain_engine_stats()
+        self.report.request_results.sort(key=lambda r: r.index)
+        return self.report
+
+    # -- admission policies ------------------------------------------------
+    def _pop_due(self, now: float) -> Optional[RequestHandle]:
+        """Pop the queue head if it has arrived (FIFO in arrival order —
+        later requests are never reordered past a waiting head)."""
+        if self._pending and self._pending[0][0] <= now:
+            return heapq.heappop(self._pending)[2]
+        return None
+
+    def _admit(self) -> None:
+        if self.serve.scheduler == "static":
+            self._admit_static()
+        else:
+            self._admit_continuous()
+
+    def _admit_static(self) -> None:
+        """Admit-in-waves policy: a new wave only once the previous wave has
+        fully drained; the wave takes every due request up to B slots."""
+        if self._wave is not None:
+            return
+        now = self._now()
+        handles: List[RequestHandle] = []
+        while len(handles) < self._b:
+            h = self._pop_due(now)
+            if h is None:
+                break
+            handles.append(h)
+        if not handles:
+            return
+        slots = list(range(len(handles)))
+        self._wave = {
+            "slots": slots, "handles": handles,
+            "rows": [[] for _ in slots], "done": [False] * len(slots),
+            "ticks": 0, "prefill_s": 0.0, "decode_s": 0.0,
+        }
+        self._prefill_wave(handles, slots)
+        if all(self._wave["done"]):
+            self._close_wave()
+
+    def _admit_continuous(self) -> None:
+        """Admit/evict policy: prefill due requests into freed slots (one
+        batched prefill per admission wave; insta-finishers free their slot
+        again, so loop until stable).  With an Eq. 2 budget the queue head
+        WAITS while its KV bytes don't fit next to the in-flight
+        sequences' (FIFO — later smaller requests are not reordered past
+        it)."""
+        now = self._now()
+        while self._free and self._pending and self._pending[0][0] <= now:
+            slots, handles = [], []
+            while self._free and self._pending and self._pending[0][0] <= now:
+                i = self._pending[0][1]
+                if (self._kv_budget is not None
+                        and self._live_kv + self._kv_need[i] > self._kv_budget):
+                    break              # head waits for an eviction
+                h = heapq.heappop(self._pending)[2]
+                slots.append(self._free.popleft())
+                handles.append(h)
+                if self._kv_budget is not None:
+                    self._live_kv += self._kv_need[i]
+            if not handles:
+                break                  # nothing admissible this attempt
+            self._prefill_wave(handles, slots)
+        # counted ONCE per admission attempt: the head is due but leaving
+        # this attempt memory-blocked despite a free slot
+        if (self._kv_budget is not None and self._free and self._pending
+                and self._pending[0][0] <= now
+                and self._live_kv + self._kv_need[self._pending[0][1]]
+                > self._kv_budget):
+            self.report.admission_deferrals += 1
+
+    # -- shared prefill / decode / finish ----------------------------------
+    def _prefill_wave(self, handles: List[RequestHandle],
+                      slots: List[int]) -> None:
+        """One batched prefill of ``handles`` into ``slots``: writes their
+        KV/state rows, arms their sampler slots, and emits each request's
+        FIRST token (sampled from the prefill logits)."""
+        engine, sampler = self._engine, self._sampler
+        ptoks, lens = pad_requests(handles, self.serve.pad_id)
+        t0 = self._now()
+        lg = engine.prefill_slots(jnp.asarray(ptoks), slots, lengths=lens)
+        for h, s in zip(handles, slots):
+            sampler.set_slot(s, h.sampling)
+        tok0 = np.asarray(sampler.sample(lg, slots))
+        now = self._now()
+        self.report.prefill_s += now - t0
+        if self._wave is not None:
+            self._wave["prefill_s"] += now - t0
+        eos = self.serve.eos_id
+        for h, s, tk, ln in zip(handles, slots, tok0, lens):
+            self._slot_handle[s] = h
+            self._pos[s] = int(ln)
+            self._cur[s] = tk
+            h.status = "running"
+            h.admit_s = t0
+            h.first_token_s = now
+            h._emit(int(tk))
+            if self._wave is not None:
+                self._wave["rows"][s] = [int(tk)]
+            if h.decode_len <= 1 or (eos is not None and tk == eos):
+                self._finish_slot(s, now)
+
+    def _decode_tick(self) -> None:
+        """One module-batched decode step over the full engine batch; live
+        slots emit their sampled token, finishers are handed to the
+        policy's finish path."""
+        engine, sampler = self._engine, self._sampler
+        wave = self._wave
+        t0 = self._now()
+        lg = engine.decode_step(
+            jnp.asarray(self._cur),
+            jnp.asarray(np.minimum(self._pos, self._max_seq - 1)),
+        )
+        nxt = np.asarray(sampler.sample(lg))
+        now = self._now()
+        self.report.decode_s += now - t0
+        counted = len(wave["slots"]) if wave is not None else self._b
+        live = [s for s in range(self._b)
+                if self._slot_handle[s] is not None
+                and not self._slot_handle[s].finished]
+        self.report.decode_slot_steps += counted
+        self.report.wasted_slot_steps += counted - len(live)
+        eos = self.serve.eos_id
+        for s in live:
+            h = self._slot_handle[s]
+            tk = int(nxt[s])
+            h._emit(tk)
+            if len(h.tokens) >= h.decode_len or (eos is not None and tk == eos):
+                self._finish_slot(s, now)
+        if wave is not None:
+            # the wave keeps stepping finished slots until its slowest
+            # member drains — record their raw chain (paper §5.1 static
+            # batches; the waste is the mode's defining metric)
+            wave["ticks"] += 1
+            wave["decode_s"] += now - t0
+            for s in wave["slots"]:
+                wave["rows"][s].append(int(nxt[s]))
+                self._cur[s] = nxt[s]
+                self._pos[s] += 1
+            if all(wave["done"]):
+                self._close_wave()
+        else:
+            for s in range(self._b):
+                if self._slot_handle[s] is not None:
+                    self._cur[s] = nxt[s]
+                    self._pos[s] += 1
+
+    def _finish_slot(self, s: int, now: float) -> None:
+        h = self._slot_handle[s]
+        h.status = "finished"
+        h.finish_s = now
+        if self._wave is not None:                      # static: keep the
+            self._wave["done"][self._wave["slots"].index(s)] = True
+            return                                      # slot until drain
+        h.decode_steps = len(h.tokens) - 1
+        self.report.request_results.append(h.result())
+        if self._kv_budget is not None:
+            self._live_kv -= self._kv_need[h.index]
+        self._slot_handle[s] = None
+        self._sampler.clear_slot(s)
+        self._engine.cache = evict_rows(self._engine.cache, [s])
+        self._free.append(s)
+
+    def _close_wave(self) -> None:
+        """Static wave drained: record its BatchResult (raw token matrix,
+        old-protocol shape) and per-request results, then free the slots."""
+        wave, self._wave = self._wave, None
+        ticks = wave["ticks"]
+        for h, s in zip(wave["handles"], wave["slots"]):
+            h.decode_steps = ticks
+            self.report.request_results.append(h.result())
+            self._slot_handle[s] = None
+            self._sampler.clear_slot(s)
+        self._engine.cache = evict_rows(self._engine.cache, wave["slots"])
+        self._free = deque(range(self._b))
+        mat = np.asarray([wave["rows"][s] for s in wave["slots"]], np.int64)
+        self.report.results.append(BatchResult(
+            mat, wave["prefill_s"], wave["decode_s"],
+            self._drain_engine_stats(),
+        ))
+
+
+def _host_kv_budget(cfg: ModelConfig, hw: HardwareProfile) -> float:
+    from repro.core.planner import host_kv_budget
+
+    return host_kv_budget(cfg, hw)
