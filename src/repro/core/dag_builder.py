@@ -31,12 +31,19 @@ class Plan:
     phase: str = "decode"
     kv_on_gpu: bool = False     # baselines keep the KV cache device-resident
     weight_reuse: int = 1       # FlexGen-style rounds reusing fetched weights
+    decode_chunk: int = 8       # fused decode chunk T: tokens generated per
+    #                             device dispatch when the engine's fused path
+    #                             is eligible (planner.select_decode_chunk
+    #                             sizes it from the admission cadence; the
+    #                             scheduler further clamps it to the shortest
+    #                             live request so no eviction is due mid-chunk)
 
     def describe(self) -> str:
         return (
             f"phase={self.phase} B={self.B} b_a={self.b_a} b_e={self.b_e} "
             f"w={self.omega:.1f} S_exp={self.s_expert/1e9:.1f}GB "
-            f"S_par={self.s_params/1e9:.1f}GB reuse={self.weight_reuse}"
+            f"S_par={self.s_params/1e9:.1f}GB reuse={self.weight_reuse} "
+            f"T={self.decode_chunk}"
         )
 
 

@@ -17,6 +17,33 @@ batched computations —
   capacity are dropped and accounted in ``EngineStats``;
 * dense modules (SSM blocks, shared FFNs, lm_head) run at full batch.
 
+**Fused donated decode (the §4/Fig. 5 few-large-launches thesis applied to
+the decode hot path).**  When every weight is device-resident
+(``ParamStore.fully_resident``) and the expert path is ``'grouped'``, decode
+leaves the per-module dispatch loop entirely: ``decode_chunk`` runs embed →
+the whole layer schema → head → per-slot sampling as ONE jitted launch
+(``_fused_decode_chunk``), with the KV/SSM cache pytree passed in and out
+under buffer DONATION and written in place via ``lax.dynamic_update_slice``
+— no functional whole-cache copies survive.  A ``lax.scan`` over ``T``
+decode ticks keeps the sampled tokens, per-slot positions and sampler
+token-indices entirely in-carry on device, so steady-state decode costs one
+Python dispatch per ``T`` tokens instead of O(layers·modules·T).  Path
+selection is automatic: streamed residency keeps the per-layer loop (the
+htod prefetch needs the layer boundary to hide behind), ``expert_path=
+'loop'`` keeps the oracle loop, and the ω host-attention rows are kept
+OUTSIDE the fused launch — rows ``[0, round(ω·B))`` decode through the
+per-module host-path modules while the remaining rows ride the fused
+launch (batch rows are independent, so the split is exact).  Fused and
+per-module decode are property-tested token-for-token identical
+(tests/test_fused_decode.py, tests/test_properties.py).
+
+**Donation contract.**  The engine OWNS the cache pytree between ticks:
+``decode_chunk`` (and the per-micro-batch attention/SSM modules, and
+``kvcache.evict_rows``) donate the cache buffers to XLA, which invalidates
+the previous arrays — callers must never retain references into
+``engine.cache`` across a decode tick (take ``np.asarray`` copies instead).
+Weights are never donated (they are reused by every launch).
+
 **Weight residency (the paper's S_Params / S_Expert, Fig. 6).**  Every
 module stage pulls its parameters through a ``serving.weights.ParamStore``
 handle instead of captured dicts.  By default the store pins everything on
@@ -44,7 +71,7 @@ the seed's sequential per-expert loop.
 Outputs are bit-compatible with the reference ``models.decode_step`` up to
 bf16 accumulation order (asserted in tests/test_engine.py).  Every module is
 a separately jitted function — the JAX analogue of the paper's per-module
-CUDA launches.
+CUDA launches — except the fused chunk, which is the paper's point: one.
 """
 from __future__ import annotations
 
@@ -55,6 +82,7 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 from repro.configs.base import ModelConfig
 from repro.core.dag_builder import Plan
@@ -64,24 +92,68 @@ from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
 from repro.models.blocks import ffn_apply, layer_forward
 from repro.models.layers import rms_norm
+from repro.serving.sampling import sample_tokens
 from repro.serving.weights import ParamStore, unstack_layers  # noqa: F401
 from repro.sharding.specs import ShardCtx
 
 
 # ---------------------------------------------------------------------------
-# Jitted module launches
+# Dispatch accounting
 # ---------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def _attn_decode_module(cfg, p, x_mb, k, v, pos):
+_DISPATCHES = 0
+
+
+def dispatch_count() -> int:
+    """Python-side device-dispatch counter: every engine module launch
+    (jitted callable invoked from the interpreter) increments it once.  The
+    fused decode chunk is exactly ONE dispatch per ``T`` tokens — asserted
+    by the regression test in tests/test_fused_decode.py."""
+    return _DISPATCHES
+
+
+def _counted(fn):
+    """Wrap a jitted module so each Python-level launch is counted."""
+
+    @functools.wraps(fn)
+    def wrapped(*args, **kwargs):
+        global _DISPATCHES
+        _DISPATCHES += 1
+        return fn(*args, **kwargs)
+
+    return wrapped
+
+
+# ---------------------------------------------------------------------------
+# Jitted module launches (the per-module path)
+# ---------------------------------------------------------------------------
+@_counted
+@functools.partial(jax.jit, static_argnames=("cfg", "lo"),
+                   donate_argnames=("k", "v"))
+def _attn_decode_module(cfg, lo, p, x_mb, k, v, pos):
+    """Device-path decode attention over batch rows ``[lo, lo+n)``.
+
+    ``k``/``v`` are the layer's FULL ``(B, span, ...)`` cache buffers,
+    DONATED: the micro-batch's rows are sliced out, updated, and written
+    back with ``lax.dynamic_update_slice`` so XLA updates the cache in
+    place instead of materializing a fresh copy per micro-batch (the seed's
+    ``k.at[lo:hi].set`` whole-cache copy)."""
+    n = x_mb.shape[0]
     h = rms_norm(x_mb[:, None, :], p["norm1"], cfg.norm_eps)
-    y, cache = attn_mod.attn_decode(cfg, p["attn"], h, {"k": k, "v": v}, pos)
-    return y[:, 0], cache["k"], cache["v"]
+    ck = lax.dynamic_slice_in_dim(k, lo, n, axis=0)
+    cv = lax.dynamic_slice_in_dim(v, lo, n, axis=0)
+    y, cache = attn_mod.attn_decode(cfg, p["attn"], h, {"k": ck, "v": cv}, pos)
+    k = lax.dynamic_update_slice_in_dim(k, cache["k"], lo, axis=0)
+    v = lax.dynamic_update_slice_in_dim(v, cache["v"], lo, axis=0)
+    return y[:, 0], k, v
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def _attn_decode_host_module(cfg, p, x_mb, k, v, pos):
+@_counted
+@functools.partial(jax.jit, static_argnames=("cfg", "lo"),
+                   donate_argnames=("k", "v"))
+def _attn_decode_host_module(cfg, lo, p, x_mb, k, v, pos):
     """Host-path attention: projections on device, mechanism on host CPU
-    with the paper's BF16-consistent arithmetic (§B)."""
+    with the paper's BF16-consistent arithmetic (§B).  Same donated
+    row-block cache contract as ``_attn_decode_module``."""
     from repro.models.layers import apply_rope
 
     B = x_mb.shape[0]
@@ -97,26 +169,41 @@ def _attn_decode_host_module(cfg, p, x_mb, k, v, pos):
     slot = jnp.where(cfg.sliding_window > 0, posv % span,
                      jnp.minimum(posv, span - 1))
     rows = jnp.arange(B)
-    ck = k.at[rows, slot].set(k_new[:, 0])
-    cv = v.at[rows, slot].set(v_new[:, 0])
+    ck = lax.dynamic_slice_in_dim(k, lo, B, axis=0)
+    cv = lax.dynamic_slice_in_dim(v, lo, B, axis=0)
+    ck = ck.at[rows, slot].set(k_new[:, 0])
+    cv = cv.at[rows, slot].set(v_new[:, 0])
     out = host_decode_attention(q[:, 0], ck, cv, posv)      # (B, H, D) f32
     o = out.reshape(B, 1, cfg.num_heads * cfg.head_dim).astype(x_mb.dtype)
     y = o @ p["attn"]["wo"]
-    return y[:, 0], ck, cv
+    k = lax.dynamic_update_slice_in_dim(k, ck, lo, axis=0)
+    v = lax.dynamic_update_slice_in_dim(v, cv, lo, axis=0)
+    return y[:, 0], k, v
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def _ssm_decode_module(cfg, p, x, state):
-    h = rms_norm(x[:, None, :], p["norm1"], cfg.norm_eps)
-    y, state = ssm_mod.ssm_decode(cfg, p["ssm"], h, state)
-    return y[:, 0], state
+@_counted
+@functools.partial(jax.jit, static_argnames=("cfg", "lo"),
+                   donate_argnames=("h", "conv"))
+def _ssm_decode_module(cfg, lo, p, x, h, conv):
+    """SSM decode over batch rows ``[lo, lo+n)`` with the state buffers
+    donated and written back as row blocks (same contract as attention)."""
+    n = x.shape[0]
+    sh = lax.dynamic_slice_in_dim(h, lo, n, axis=0)
+    sc = lax.dynamic_slice_in_dim(conv, lo, n, axis=0)
+    z = rms_norm(x[:, None, :], p["norm1"], cfg.norm_eps)
+    y, state = ssm_mod.ssm_decode(cfg, p["ssm"], z, {"h": sh, "conv": sc})
+    h = lax.dynamic_update_slice_in_dim(h, state["h"], lo, axis=0)
+    conv = lax.dynamic_update_slice_in_dim(conv, state["conv"], lo, axis=0)
+    return y[:, 0], h, conv
 
 
+@_counted
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def _router_module(cfg, router_w, h):
     return moe_mod.route(cfg, router_w, h)
 
 
+@_counted
 @jax.jit
 def _expert_module(wg, wu, wd, h_chunk):
     """One expert over a chunk of tokens (the 'loop' oracle path's unit)."""
@@ -125,11 +212,12 @@ def _expert_module(wg, wu, wd, h_chunk):
     return (jax.nn.silu(g) * u) @ wd
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "capacity"))
-def _grouped_expert_module(cfg, p, x, capacity):
-    """The whole MoE stage as one on-device launch sequence: norm -> route ->
-    capacity-bucketed gather -> grouped FFN -> weighted scatter-add.
-    Returns (y, kept, dropped); the counters stay on device."""
+def _grouped_expert_math(cfg, p, x, capacity):
+    """The whole MoE stage, traceable: norm -> route -> capacity-bucketed
+    gather -> grouped FFN -> weighted scatter-add.  Returns (y, kept,
+    dropped); the counters stay on device.  Launched standalone by the
+    per-module path (``_grouped_expert_module``) and inlined by the fused
+    decode chunk — ONE implementation, so both paths are bit-identical."""
     moe = p["moe"]
     h = rms_norm(x, p["norm2"], cfg.norm_eps)
     gates, idx, _ = moe_mod.route(cfg, moe["router"], h)
@@ -140,29 +228,44 @@ def _grouped_expert_module(cfg, p, x, capacity):
     )
 
 
+_grouped_expert_module = _counted(
+    functools.partial(jax.jit, static_argnames=("cfg", "capacity"))(
+        _grouped_expert_math
+    )
+)
+
+
+@_counted
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def _ffn_module(cfg, p, x):
     h = rms_norm(x, p["norm2"], cfg.norm_eps)
     return ffn_apply(p["ffn"], h)
 
 
+@_counted
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def _norm2_module(cfg, p, x):
     return rms_norm(x, p["norm2"], cfg.norm_eps)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "tie"))
-def _head_module(cfg, tie, params, x):
+def _head_math(cfg, tie, params, x):
     h = rms_norm(x, params["final_norm"], cfg.norm_eps)
     w = params["embed"].T if tie else params["lm_head"]
     return h @ w
 
 
+_head_module = _counted(
+    functools.partial(jax.jit, static_argnames=("cfg", "tie"))(_head_math)
+)
+
+
+@_counted
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def _embed_module(cfg, embed, tokens):
     return jnp.take(embed, tokens, axis=0)
 
 
+@_counted
 @functools.partial(jax.jit, static_argnames=("cfg", "kind", "ffn", "sctx"))
 def _prefill_layer_module(cfg, kind, ffn, sctx, p, x, positions, lengths):
     """One full layer (mixer + FFN stage) over a prefill micro-batch.
@@ -173,6 +276,118 @@ def _prefill_layer_module(cfg, kind, ffn, sctx, p, x, positions, lengths):
     MoE path — grouped prefill passes ``moe_capacity`` = the micro-batch
     token count, so no routed copy is dropped."""
     return layer_forward(cfg, kind, ffn, p, x, sctx, positions, lengths)
+
+
+# ---------------------------------------------------------------------------
+# The fused decode macro-step (ONE launch per T-token chunk)
+# ---------------------------------------------------------------------------
+@_counted
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "schema", "tie", "capacity", "lo", "pos_cap",
+                     "use_topk", "greedy_only", "T"),
+    donate_argnames=("cache",),
+)
+def _fused_decode_chunk(cfg, schema, tie, capacity, lo, pos_cap, use_topk,
+                        greedy_only, T, base, layer_params, tokens, pos,
+                        live, cache, keys, steps, temps, topks):
+    """The fused donated decode macro-step: embed → every layer of the
+    schema (unrolled — the schema mixes attn/SSM and moe/dense stages) →
+    head → per-slot sampling, scanned over ``T`` decode ticks entirely on
+    device.  ONE launch per chunk.
+
+    * ``cache`` is the engine's FULL-batch layer cache pytree, DONATED —
+      each tick's KV/SSM writes land via ``lax.dynamic_update_slice`` /
+      per-row scatter on the aliased buffers, so no whole-cache copy is
+      ever materialized, and the caller's previous cache arrays are
+      invalidated (the engine owns the pytree between ticks).
+    * ``tokens``/``pos`` are the ``n`` fused rows' current tokens and
+      positions (rows ``[lo, lo+n)`` of the batch — the ω host-path rows
+      ``[0, lo)`` stay OUTSIDE this launch); both advance in-carry, with
+      positions clamped at ``pos_cap`` exactly like the per-module
+      scheduler tick.
+    * ``live`` (n,) bool marks rows owned by an unfinished request: a dead
+      (recycled/free) row's carry is HELD — it re-feeds its stale token at
+      its stale position every tick, exactly like per-tick stepping, where
+      the scheduler never updates a free slot's ``_cur``/``_pos``.  This is
+      what keeps chunked decode tick-identical to per-tick decode even
+      when expert-capacity drops couple rows through the grouped dispatch.
+    * ``keys/steps/temps/topks`` are the rows' ``BatchSampler`` state;
+      sampling inlines ``serving.sampling.sample_tokens`` (the SAME
+      function the per-module sampler launches) with the token indices
+      advancing in-carry, so seeded streams are bit-identical to
+      per-module decode.
+
+    Returns ``(toks (n, T), cache, kept, dropped)``.
+    """
+    n = tokens.shape[0]
+    # optimization barriers mark the per-module boundaries inside the one
+    # launch: XLA may not fuse across them, so every module subgraph
+    # compiles exactly like its standalone per-module counterpart — which
+    # is what makes the fused chunk BIT-identical to per-module decode
+    # (cross-module fusion reassociates bf16 reductions otherwise).  The
+    # barriers do not split the dispatch: the chunk is still one launch.
+    bar = lax.optimization_barrier
+
+    def tick(carry, _):
+        toks, pos, cache, steps, kept, dropped = carry
+        cache = list(cache)
+        x = bar(jnp.take(base["embed"], toks, axis=0))
+        posv = jnp.minimum(pos, pos_cap)
+        for li, (kind, ffn) in enumerate(schema):
+            p = layer_params[li]
+            if kind == "attn":
+                k, v = cache[li]["k"], cache[li]["v"]
+                h = rms_norm(x[:, None, :], p["norm1"], cfg.norm_eps)
+                ck = lax.dynamic_slice_in_dim(k, lo, n, axis=0)
+                cv = lax.dynamic_slice_in_dim(v, lo, n, axis=0)
+                y, upd = attn_mod.attn_decode(
+                    cfg, p["attn"], h, {"k": ck, "v": cv}, posv
+                )
+                nk = lax.dynamic_update_slice_in_dim(k, upd["k"], lo, 0)
+                nv = lax.dynamic_update_slice_in_dim(v, upd["v"], lo, 0)
+                y, nk, nv = bar((y[:, 0], nk, nv))
+                cache[li] = {"k": nk, "v": nv}
+                x = bar(x + y)
+            else:
+                hs, cs = cache[li]["h"], cache[li]["conv"]
+                sh = lax.dynamic_slice_in_dim(hs, lo, n, axis=0)
+                sc = lax.dynamic_slice_in_dim(cs, lo, n, axis=0)
+                z = rms_norm(x[:, None, :], p["norm1"], cfg.norm_eps)
+                y, st = ssm_mod.ssm_decode(
+                    cfg, p["ssm"], z, {"h": sh, "conv": sc}
+                )
+                nh = lax.dynamic_update_slice_in_dim(hs, st["h"], lo, 0)
+                nc = lax.dynamic_update_slice_in_dim(cs, st["conv"], lo, 0)
+                y, nh, nc = bar((y[:, 0], nh, nc))
+                cache[li] = {"h": nh, "conv": nc}
+                x = bar(x + y)
+            if ffn == "moe":
+                y, kp, dr = _grouped_expert_math(cfg, p, x, capacity)
+                y, kp, dr = bar((y, kp, dr))
+                kept = kept + kp
+                dropped = dropped + dr
+                x = bar(x + y)
+            elif cfg.d_ff > 0 and "ffn" in p:
+                y = bar(ffn_apply(p["ffn"],
+                                  rms_norm(x, p["norm2"], cfg.norm_eps)))
+                x = bar(x + y)
+        logits = bar(_head_math(cfg, tie, base, x))
+        if greedy_only:
+            nxt = jnp.argmax(logits, axis=-1)
+        else:
+            nxt = sample_tokens(logits, keys, steps, temps, topks, use_topk)
+        carry_tok = jnp.where(live, nxt, toks)     # dead rows hold stale tok
+        carry_pos = pos + live.astype(pos.dtype)   # ...at their stale pos
+        return (carry_tok, carry_pos, tuple(cache), steps + 1, kept,
+                dropped), nxt
+
+    zero = jnp.zeros((), jnp.int32)
+    carry0 = (tokens, pos, tuple(cache), steps, zero, zero)
+    (_, _, cache, _, kept, dropped), ys = lax.scan(
+        tick, carry0, None, length=T
+    )
+    return jnp.swapaxes(ys, 0, 1), cache, kept, dropped
 
 
 # ---------------------------------------------------------------------------
@@ -188,6 +403,9 @@ class EngineStats:
     device_attn_tokens: int = 0
     weight_htod_bytes: int = 0           # streamed weight bytes copied htod
     prefetch_wait_s: float = 0.0         # stall waiting on weight transfers
+    fused_dispatches: int = 0            # fused decode launches issued
+    fused_ticks: int = 0                 # decode ticks served by fused launches
+    decode_retraces: int = 0             # distinct fused (B, path, chunk) keys
 
 
 class ModuleBatchingEngine:
@@ -211,6 +429,15 @@ class ModuleBatchingEngine:
     shares the grouped prefill numerics by default and grouped-vs-loop
     generation stays token-for-token comparable.
 
+    **Fused decode selection.**  ``decode_chunk``/``decode_step_sampled``
+    take the fused one-launch path automatically when ``fused_decode=True``
+    (default), the expert path is grouped, and the store is fully resident
+    (``fused_eligible()``).  Streamed residency falls back to the
+    per-module loop (the prefetch needs the layer boundary); the ω
+    host-attention rows always decode per-module, outside the fused
+    launch.  ``fused_decode=False`` forces the per-module path — the
+    oracle the fused path is property-tested against.
+
     **Weight residency.**  All module stages read parameters through
     ``self.store`` (a ``serving.weights.ParamStore``).  By default every
     weight is device-resident.  ``stream_weights=True`` keeps only the plan's
@@ -232,6 +459,7 @@ class ModuleBatchingEngine:
         stream_weights: bool = False,
         resident_bytes: Optional[float] = None,
         prefetch: bool = True,
+        fused_decode: bool = True,
     ) -> None:
         assert expert_path in ("grouped", "loop"), expert_path
         self.cfg = cfg
@@ -239,6 +467,7 @@ class ModuleBatchingEngine:
         self.max_seq = max_seq
         self.expert_path = expert_path
         self.grouped_prefill = grouped_prefill
+        self.fused_decode = fused_decode
         if store is None:
             store = ParamStore.build(
                 cfg, params, plan, stream_weights=stream_weights,
@@ -256,6 +485,12 @@ class ModuleBatchingEngine:
         # them lazy is what lets decode_step run without a single host sync.
         self._kept_dev = jnp.zeros((), jnp.int32)
         self._dropped_dev = jnp.zeros((), jnp.int32)
+        self._batch = 0
+        # fused-path bookkeeping: per-layer param tuple (aliases the
+        # resident arrays) and the set of (B, path, chunk) trace keys seen
+        # (a new key = one XLA retrace, surfaced as stats.decode_retraces)
+        self._fused_params: Optional[Tuple[Dict, ...]] = None
+        self._fused_keys: set = set()
 
     def _expert_capacity(self, batch: int) -> int:
         """Per-expert capacity C: the plan's b_e, clamped to the most tokens
@@ -277,6 +512,7 @@ class ModuleBatchingEngine:
     # -- cache management ---------------------------------------------
     def init_cache(self, batch: int) -> None:
         self.cache = []
+        self._batch = batch
         for kind, _ in self.schema:
             from repro.models.blocks import init_layer_cache
 
@@ -371,8 +607,23 @@ class ModuleBatchingEngine:
             h_last = x_full[jnp.arange(n), lengths - 1]
         return _head_module(cfg, cfg.tie_embeddings, self.store.base, h_last)
 
+    # -- path selection ---------------------------------------------------
+    def fused_eligible(self) -> bool:
+        """True when decode can take the fused one-launch path: fused
+        decode enabled, grouped expert dispatch, and EVERY weight resident
+        on device (streamed layers keep the per-layer dispatch loop so the
+        htod prefetch has a layer boundary to overlap with)."""
+        return (self.fused_decode and self.expert_path == "grouped"
+                and self.store.fully_resident)
+
+    def _fused_layer_params(self) -> Tuple[Dict, ...]:
+        if self._fused_params is None:
+            self._fused_params = self.store.fused_layer_params()
+        return self._fused_params
+
+    # -- decode -----------------------------------------------------------
     def decode_step(self, tokens: jax.Array, pos) -> jax.Array:
-        """One module-batched decode step for all B sequences.
+        """One PER-MODULE decode step for all B sequences; returns logits.
 
         ``pos`` is the write/attend position: a scalar for uniform batches,
         or a per-sequence (B,) vector for ragged batches and the continuous
@@ -381,18 +632,29 @@ class ModuleBatchingEngine:
         Streamed layers pipeline with compute: layer *l+1*'s weight
         prefetch is issued after layer *l*'s mixer and before its FFN /
         grouped-GEMM launch, so the htod copy rides the async dispatch
-        queue behind the step's heaviest compute.
+        queue behind the step's heaviest compute.  (The fused one-launch
+        path lives in ``decode_chunk``; this method is the per-module
+        oracle and the streamed/loop execution path.)
         """
-        cfg = self.cfg
         pos = jnp.asarray(pos, jnp.int32)
+        return self._decode_rows(jnp.asarray(tokens), pos, 0)
+
+    def _decode_rows(self, tokens, pos, row0: int) -> jax.Array:
+        """Per-module decode over batch rows ``[row0, row0+n)`` — ``tokens``
+        and ``pos`` are the rows' own (n,)/scalar arrays.  The full-batch
+        ``decode_step`` is ``row0=0``; the fused path calls it with the ω
+        host segment so host-path rows decode outside the fused launch."""
+        cfg = self.cfg
         x = _embed_module(cfg, self.store.base["embed"], tokens)
         for li, (kind, ffn) in enumerate(self.schema):
             p = self.store.acquire(li)
             if kind == "attn":
-                x = x + self._attention_stage(li, p, x, pos)
+                x = x + self._attention_stage(li, p, x, pos, row0)
             else:
-                y, state = _ssm_decode_module(cfg, p, x, self.cache[li])
-                self.cache[li] = state
+                y, h, conv = _ssm_decode_module(
+                    cfg, row0, p, x, self.cache[li]["h"], self.cache[li]["conv"]
+                )
+                self.cache[li] = {"h": h, "conv": conv}
                 x = x + y
             self.store.prefetch(li + 1)     # before the FFN/grouped launch
             if ffn == "moe":
@@ -402,33 +664,36 @@ class ModuleBatchingEngine:
         return _head_module(cfg, cfg.tie_embeddings, self.store.base, x)
 
     # -- module stages ---------------------------------------------------
-    def _attention_stage(self, li, p, x, pos) -> jax.Array:
+    def _attention_stage(self, li, p, x, pos, row0: int = 0) -> jax.Array:
         """Micro-batched attention with the ω host/device split.
 
-        The first ``round(ω·B)`` sequences take the host path.  A micro-batch
-        straddling that boundary is split at it, so the realized host
-        fraction is exactly ``round(ω·B)/B`` instead of silently rounding a
-        whole micro-batch onto the device path.
+        The first ``round(ω·B)`` sequences of the FULL batch take the host
+        path.  A micro-batch straddling that boundary is split at it, so
+        the realized host fraction is exactly ``round(ω·B)/B`` instead of
+        silently rounding a whole micro-batch onto the device path.
+
+        The cache buffers are threaded through the donated row-block
+        modules — each micro-batch's rows are updated in place; no
+        whole-cache functional copy is made.
         """
         cfg, plan = self.cfg, self.plan
-        B = x.shape[0]
+        n = x.shape[0]
+        B = self._batch or n
         n_host = int(round(plan.omega * B))
         outs = []
-        b_a = max(1, min(plan.b_a, B))
+        b_a = max(1, min(plan.b_a, n))
         k, v = self.cache[li]["k"], self.cache[li]["v"]
-        lo = 0
-        while lo < B:
-            hi = min(B, lo + b_a)
+        lo, end = row0, row0 + n
+        while lo < end:
+            hi = min(end, lo + b_a)
             if lo < n_host < hi:
                 hi = n_host                    # split the straddling batch
             fn = (
                 _attn_decode_host_module if hi <= n_host
                 else _attn_decode_module
             )
-            mb_pos = pos if pos.ndim == 0 else pos[lo:hi]
-            y, ck, cv = fn(cfg, p, x[lo:hi], k[lo:hi], v[lo:hi], mb_pos)
-            k = k.at[lo:hi].set(ck)
-            v = v.at[lo:hi].set(cv)
+            mb_pos = pos if pos.ndim == 0 else pos[lo - row0:hi - row0]
+            y, k, v = fn(cfg, lo, p, x[lo - row0:hi - row0], k, v, mb_pos)
             outs.append(y)
             self.stats.attn_microbatches += 1
             if hi <= n_host:
@@ -488,19 +753,129 @@ class ModuleBatchingEngine:
                 self.stats.expert_tokens += int(r.size)
         return y
 
+    # -- chunked decode ---------------------------------------------------
+    def decode_chunk(self, tokens, pos, sampler, T: int,
+                     live=None) -> jax.Array:
+        """``T`` decode ticks for the full batch, sampled per slot; returns
+        the ``(B, T)`` token matrix (column *t* is tick *t*'s tokens, fed
+        back as tick *t+1*'s input).
+
+        Fused one-launch path when ``fused_eligible()``: device rows ride
+        ONE donated ``_fused_decode_chunk`` launch; the ω host-attention
+        rows ``[0, round(ω·B))`` decode per-module OUTSIDE the launch
+        (rows are independent, so the split is exact up to expert-capacity
+        drops, which are per-dispatch).  Otherwise every row takes the
+        per-module path, one tick at a time.  Positions are clamped at
+        ``max_seq - 1`` exactly like the scheduler's per-tick clamp.
+
+        ``live`` (B,) bool marks rows owned by unfinished requests (None =
+        all).  Dead rows re-feed their stale token/position every tick —
+        matching per-tick stepping, where the scheduler never updates a
+        free slot — so chunked decode is tick-identical to per-tick decode
+        even when expert-capacity drops couple rows through the grouped
+        dispatch.  Both paths are token-for-token identical
+        (property-tested).
+        """
+        tokens = jnp.asarray(tokens)
+        pos = jnp.asarray(pos, jnp.int32)
+        B = tokens.shape[0]
+        if not (self.fused_eligible() and self.cache is not None):
+            return self._chunk_rows_per_module(tokens, pos, sampler, T, 0, B,
+                                               live)
+        n_host = int(round(self.plan.omega * B))
+        if n_host >= B:
+            return self._chunk_rows_per_module(tokens, pos, sampler, T, 0, B,
+                                               live)
+        host_cols = None
+        if n_host:
+            # host-path rows first: their per-module modules update cache
+            # rows [0, n_host) before the fused launch donates the buffers
+            host_cols = self._chunk_rows_per_module(
+                tokens, pos, sampler, T, 0, n_host, live
+            )
+        n = B - n_host
+        posv = jnp.broadcast_to(jnp.atleast_1d(pos), (B,)).astype(jnp.int32)
+        livev = (jnp.ones((B,), bool) if live is None
+                 else jnp.asarray(live, bool))
+        idx = np.arange(n_host, B)
+        keys, steps, temps, topks = sampler.state(idx)
+        use_topk = bool((topks > 0).any())
+        greedy_only = not bool((temps > 0).any())
+        capacity = self._expert_capacity(n)
+        cap = self.max_seq - 1
+        key = (n, n_host, T, capacity, cap, use_topk, greedy_only)
+        if key not in self._fused_keys:
+            self._fused_keys.add(key)
+            self.stats.decode_retraces += 1
+        toks, cache, kept, dropped = _fused_decode_chunk(
+            self.cfg, tuple(self.schema), self.cfg.tie_embeddings, capacity,
+            n_host, cap, use_topk, greedy_only, T,
+            self.store.base, self._fused_layer_params(),
+            tokens[n_host:], posv[n_host:], livev[n_host:], tuple(self.cache),
+            jnp.asarray(keys), jnp.asarray(steps), jnp.asarray(temps),
+            jnp.asarray(topks),
+        )
+        self.cache = list(cache)
+        self._kept_dev = self._kept_dev + kept
+        self._dropped_dev = self._dropped_dev + dropped
+        sampler.advance(idx, T)
+        self.stats.fused_dispatches += 1
+        self.stats.fused_ticks += T
+        # the fused launch bundles the per-module work units into one
+        # dispatch — keep their accounting equivalent to the per-module
+        # path: one grouped-dispatch evaluation per MoE layer per tick,
+        # and every fused row is a device-path attention token per attn
+        # layer per tick (host rows were counted by their per-module pass)
+        self.stats.expert_launches += T * sum(
+            1 for _, f in self.schema if f == "moe"
+        )
+        self.stats.device_attn_tokens += n * T * sum(
+            1 for k, _ in self.schema if k == "attn"
+        )
+        if host_cols is None:
+            return toks
+        return jnp.concatenate([host_cols, toks], axis=0)
+
+    def _chunk_rows_per_module(self, tokens, pos, sampler, T: int,
+                               lo: int, hi: int, live=None) -> jax.Array:
+        """Per-module chunk fallback over batch rows ``[lo, hi)``: ``T``
+        sequential decode ticks, each sampled through the caller's
+        ``BatchSampler`` (the streamed / loop-path / host-row execution).
+        Dead rows (``live`` False) hold their stale token/position, like
+        per-tick stepping."""
+        slots = np.arange(lo, hi)
+        cur = tokens[lo:hi]
+        posr = pos if pos.ndim == 0 else pos[lo:hi]
+        lv = None if live is None else jnp.asarray(live, bool)[lo:hi]
+        if lv is not None and posr.ndim == 0:
+            posr = jnp.broadcast_to(posr, (hi - lo,))
+        adv = None if lv is None else lv.astype(jnp.int32)
+        cap = self.max_seq - 1
+        cols = []
+        for t in range(T):
+            pt = jnp.minimum(posr + (t if adv is None else t * adv), cap)
+            lg = self._decode_rows(cur, pt, lo)
+            sampled = sampler.sample(lg, slots)
+            cols.append(sampled)
+            cur = sampled if lv is None else jnp.where(lv, sampled, cur)
+        return jnp.stack(cols, axis=1)
+
     def decode_step_sampled(self, tokens: jax.Array, pos, sampler,
                             slots=None) -> jax.Array:
-        """One decode tick plus on-device per-slot sampling: runs
-        ``decode_step`` and turns the logits into next tokens through a
-        ``serving.sampling.BatchSampler`` (mixed greedy/temperature/top-k
-        slots, seeded per slot — see that module's determinism contract).
-        Returns the (B,) next-token array instead of logits."""
+        """One decode tick plus on-device per-slot sampling: one fused
+        launch when eligible (``decode_chunk`` with ``T=1``), else
+        ``decode_step`` + a ``serving.sampling.BatchSampler`` launch (mixed
+        greedy/temperature/top-k slots, seeded per slot — see that module's
+        determinism contract).  Returns the (B,) next-token array instead
+        of logits."""
+        if slots is None and self.fused_eligible() and self.cache is not None:
+            return self.decode_chunk(tokens, pos, sampler, 1)[:, 0]
         return sampler.sample(self.decode_step(tokens, pos), slots)
 
     # -- generation -------------------------------------------------------
     def generate(
         self, tokens: jax.Array, decode_len: int, frontend_emb=None,
-        lengths=None, sampling=None,
+        lengths=None, sampling=None, chunk: Optional[int] = None,
     ) -> jax.Array:
         """Generation — greedy by default (the paper's decoding strategy,
         §B); pass ``sampling`` (a ``serving.sampling.SamplingParams``) for
@@ -511,16 +886,30 @@ class ModuleBatchingEngine:
         ``lengths`` (B,) generates from a ragged right-padded batch: each
         sequence decodes at its own positions, token-for-token identical to
         generating it alone unpadded.
+
+        Decode runs in fused multi-token chunks of ``chunk`` ticks
+        (default: the plan's ``decode_chunk``) when the fused path is
+        eligible — one device dispatch per chunk; the per-module fallback
+        ticks through the same chunks one launch-set at a time, with
+        identical tokens either way.
         """
         from repro.serving.sampling import BatchSampler
 
         B, S = tokens.shape
         sampler = BatchSampler.uniform(B, sampling)
         logits = self.prefill(tokens, frontend_emb, lengths=lengths)
-        out = [sampler.sample(logits)]
+        cols = [sampler.sample(logits)]
         base = S if lengths is None else jnp.asarray(lengths, jnp.int32)
-        for t in range(decode_len - 1):
-            out.append(self.decode_step_sampled(out[-1], base + t, sampler))
-        result = jnp.stack(out, axis=1)              # (B, decode_len)
+        step = max(1, chunk if chunk is not None
+                   else getattr(self.plan, "decode_chunk", 1))
+        t, total = 0, decode_len - 1
+        while t < total:
+            Tc = min(step, total - t)
+            mat = self.decode_chunk(
+                cols[-1], jnp.asarray(base + t, jnp.int32), sampler, Tc
+            )
+            cols.extend(mat[:, j] for j in range(Tc))
+            t += Tc
+        result = jnp.stack(cols, axis=1)             # (B, decode_len)
         self.sync_stats()                            # fold device counters in
         return result

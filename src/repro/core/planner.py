@@ -76,6 +76,45 @@ def select_residency(
     return replace(plan, s_params=rp.resident_bytes, s_expert=s_expert)
 
 
+def select_decode_chunk(
+    plan: Plan,
+    mean_decode_len: int,
+    scheduler: str = "continuous",
+    arrival_rate: float = 0.0,
+    step_time_s: Optional[float] = None,
+    cap: int = 64,
+) -> int:
+    """Plan the fused decode chunk ``T`` from the admission cadence.
+
+    The fused engine generates ``T`` tokens per device dispatch, but the
+    scheduler can only admit/evict at chunk boundaries — so ``T`` must stay
+    below the expected number of decode ticks between scheduling events:
+
+    * ``continuous`` — a slot frees roughly every ``mean_decode_len / B``
+      ticks (evictions are the admission opportunities);
+    * ``static`` — nothing is admitted mid-wave, so the cadence is the wave
+      itself (``mean_decode_len`` ticks);
+    * an open-loop arrival stream at ``arrival_rate`` req/s delivers a new
+      request every ``1 / (rate * step_time_s)`` ticks (when ``step_time_s``
+      is known, e.g. from the DAG estimate's ``t_model``).
+
+    Returns the largest power of two no larger than the tightest cadence,
+    clamped to ``[1, cap]``.  ``T`` only affects scheduling granularity,
+    never tokens — the engine's fused chunk is token-identical to per-tick
+    decode at any ``T``.
+    """
+    if scheduler == "static":
+        cadence = float(max(1, mean_decode_len))
+    else:
+        cadence = mean_decode_len / max(1, plan.B)
+    if arrival_rate > 0 and step_time_s:
+        cadence = min(cadence, 1.0 / (arrival_rate * step_time_s))
+    T = 1
+    while T * 2 <= min(cadence, float(cap)):
+        T *= 2
+    return T
+
+
 def device_memory_used(
     cfg: ModelConfig, plan: Plan, ctx: int, phase: str
 ) -> float:
@@ -135,6 +174,9 @@ def search_decode(
     B: Optional[int] = None,
     omega_grid: Optional[Iterable[float]] = None,
     use_cpu_attention: bool = True,
+    decode_len: Optional[int] = None,
+    arrival_rate: float = 0.0,
+    scheduler: str = "continuous",
 ) -> SearchResult:
     B_max = host_batch_limit(cfg, hw, ctx)
     if B_max == 0:
@@ -191,7 +233,15 @@ def search_decode(
                         best = (est.throughput, plan, est)
         B_try //= 2
     assert best is not None, "no feasible decode plan"
-    return SearchResult(best[1], best[2], n_eval)
+    plan, est = best[1], best[2]
+    # realized workload prior for the fused chunk: the caller's mean decode
+    # length if known, else a coarse quarter-context default
+    mean_dec = decode_len if decode_len else max(1, ctx // 4)
+    plan = replace(plan, decode_chunk=select_decode_chunk(
+        plan, mean_dec, scheduler=scheduler, arrival_rate=arrival_rate,
+        step_time_s=est.t_model,
+    ))
+    return SearchResult(plan, est, n_eval)
 
 
 def search_prefill(

@@ -77,7 +77,10 @@ def main() -> None:
 
     # 1. plan on the FULL config with the paper's search
     full = get_config(args.arch)
-    res = planner.search_decode(full, hw, ctx=args.prompt_len + args.decode_len)
+    res = planner.search_decode(
+        full, hw, ctx=args.prompt_len + args.decode_len,
+        decode_len=args.decode_len, scheduler=args.scheduler,
+    )
     print(f"planned ({full.name} on {hw.name}): {res.plan.describe()}")
     rp_full = W.plan_residency(full, res.plan.s_params)
     print(f"planned residency: {rp_full.resident_bytes/1e9:.1f}GB resident "
@@ -116,6 +119,15 @@ def main() -> None:
         s_params=res.plan.s_params,
         s_expert=res.plan.s_expert,
     )
+    # re-plan the fused chunk T at the smoke batch (the admission cadence
+    # scales with B, so the full-config T would over- or under-chunk here)
+    from dataclasses import replace as dc_replace
+
+    plan = dc_replace(plan, decode_chunk=planner.select_decode_chunk(
+        plan, args.decode_len, scheduler=args.scheduler,
+    ))
+    print(f"fused decode chunk T={plan.decode_chunk} "
+          f"({args.scheduler} cadence at B={plan.B})")
     # --resident-gb implies streaming; at smoke scale the full-model
     # S_Params would pin everything, so the streamed smoke run defaults to
     # resident_bytes=0 to actually exercise the stream path

@@ -10,6 +10,7 @@ overwritten by the next admitted request).
 """
 from __future__ import annotations
 
+import functools
 from typing import List, Sequence, Tuple
 
 import jax
@@ -106,18 +107,27 @@ def scatter_prefill_rows(
     return cache
 
 
+@functools.partial(jax.jit, donate_argnames=("cache",))
+def _evict_module(cache, rows):
+    return jax.tree.map(
+        lambda a: a.at[rows].set(jnp.zeros((), a.dtype)), cache
+    )
+
+
 def evict_rows(cache: List, rows: Sequence[int]) -> List:
     """Zero batch rows across every layer buffer (slot recycling).
 
     Not required for correctness — decode masks by per-sequence position
     and insertion overwrites whole rows — but keeps freed slots inert
     between eviction and the next admission.
+
+    One jitted launch with the cache pytree DONATED: the rows are zeroed in
+    place instead of functionally copying every (B, S, ...) buffer per
+    eviction.  The caller's cache reference is consumed — assign the return
+    value back (the engine owns the cache between ticks; see the ROADMAP
+    donation contract).
     """
-    rows = jnp.asarray(rows)
-    return [
-        jax.tree.map(lambda a: a.at[rows].set(jnp.zeros((), a.dtype)), layer)
-        for layer in cache
-    ]
+    return list(_evict_module(tuple(cache), jnp.asarray(rows)))
 
 
 def cache_bytes(cache: List) -> int:

@@ -64,9 +64,14 @@ def top_k_sample(key, logits: jax.Array, k: int, temperature: float = 1.0):
     return jnp.take_along_axis(idx, choice[..., None], axis=-1)[..., 0]
 
 
-@functools.partial(jax.jit, static_argnames=("use_topk",))
-def _sample_module(logits, keys, steps, temps, topks, use_topk):
-    """One batched sampling launch: (B, V) logits -> (B,) tokens.
+def sample_tokens(logits, keys, steps, temps, topks, use_topk):
+    """Traceable batched sampling math: (B, V) logits -> (B,) tokens.
+
+    This is THE per-slot sampling function — ``BatchSampler`` launches it as
+    its own jitted module (``_sample_module``) and the engine's fused decode
+    macro-step inlines it inside the one-launch chunk, so both paths share
+    bit-identical sampling (the fused/per-module token-identity contract
+    depends on this being the single implementation).
 
     Per-slot Gumbel-max categorical over temperature-scaled logits with an
     optional top-k mask; slots with ``temps <= 0`` take the greedy argmax
@@ -98,6 +103,11 @@ def _sample_module(logits, keys, steps, temps, topks, use_topk):
     gum = jax.vmap(noise)(keys, steps)
     sampled = jnp.argmax(scaled + gum, axis=-1)
     return jnp.where(temps > 0, sampled, greedy_tok)
+
+
+_sample_module = functools.partial(jax.jit, static_argnames=("use_topk",))(
+    sample_tokens
+)
 
 
 class BatchSampler:
@@ -148,6 +158,20 @@ class BatchSampler:
             for i in range(nslots):
                 s.set_slot(i, params, salt=i)
         return s
+
+    def state(self, slots: Sequence[int]):
+        """The selected slots' raw sampling state ``(keys, steps, temps,
+        topks)`` — consumed by the engine's fused decode chunk, which inlines
+        ``sample_tokens`` on device and advances the slots with
+        ``advance()`` afterwards."""
+        idx = np.asarray(slots, np.int64)
+        return (self._keys[idx].copy(), self._steps[idx].copy(),
+                self._temps[idx].copy(), self._topks[idx].copy())
+
+    def advance(self, slots: Sequence[int], n: int = 1) -> None:
+        """Advance the selected slots' token indices by ``n`` (the fused
+        chunk sampled ``n`` tokens per slot device-side)."""
+        self._steps[np.asarray(slots, np.int64)] += n
 
     def sample(self, logits: jax.Array,
                slots: Optional[Sequence[int]] = None) -> jax.Array:

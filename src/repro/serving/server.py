@@ -9,6 +9,14 @@ slot, samples each slot under its own ``SamplingParams``, and
 evicts/recycles finished sequences.  ``run()`` loops ``step()`` (sleeping
 through idle gaps until the next arrival) and returns the ``ServeReport``.
 
+When the engine's fused decode path is eligible and no admission or
+eviction can fall due mid-chunk, ``step()`` batches up to
+``decode_chunk`` ticks into ONE fused device dispatch
+(``engine.decode_chunk``) — clamped to the shortest remaining decode so
+every finish event still lands at a chunk boundary; tokens, timestamps
+and the waste accounting are tick-identical to per-tick stepping (see
+``_chunk_T``).
+
 The two scheduler modes are thin *admission policies* over that single
 core — the prefill/decode/EOS/latency bookkeeping lives once:
 
@@ -82,6 +90,8 @@ class ServeConfig:
     expert_path: str = "grouped"
     grouped_prefill: bool = True
     hw: Optional[HardwareProfile] = None
+    decode_chunk: Optional[int] = None   # fused chunk T cap (None = plan's);
+    #                                      1 disables multi-token stepping
 
     def __post_init__(self) -> None:
         assert self.scheduler in ("static", "continuous"), self.scheduler
@@ -468,7 +478,7 @@ class Server:
         self._ensure_engine()
         self._admit()
         if self._any_live():
-            self._decode_tick()
+            self._decode_tick(self._chunk_T())
         return self.has_work()
 
     def run(self, until_idle: bool = True) -> ServeReport:
@@ -590,50 +600,100 @@ class Server:
             if h.decode_len <= 1 or (eos is not None and tk == eos):
                 self._finish_slot(s, now)
 
-    def _decode_tick(self) -> None:
-        """One module-batched decode step over the full engine batch; live
-        slots emit their sampled token, finishers are handed to the
-        policy's finish path."""
+    def _chunk_T(self) -> int:
+        """Decode ticks to run this step as ONE fused multi-token chunk.
+
+        Chunking is the module-batching thesis applied to the scheduler:
+        when no admission or eviction can fall due mid-chunk, ``T`` decode
+        ticks cost one device dispatch (``engine.decode_chunk``) instead of
+        ``T``.  ``T`` is capped by the plan's ``decode_chunk`` (or the
+        ``ServeConfig`` override) and clamped to the SHORTEST remaining
+        decode among unfinished slots, so every finish event still lands
+        exactly at a chunk boundary (timestamps, eviction and §5.1 waste
+        accounting are tick-identical to per-tick stepping).  Falls back to
+        1 when: an ``eos_id`` is set (finishes are unpredictable), the
+        engine is not fused-eligible (streamed weights keep the per-layer
+        loop), or — continuous mode — a queued arrival could be admitted
+        into a free slot mid-chunk.
+        """
+        cap = self.serve.decode_chunk or getattr(self.plan, "decode_chunk", 1)
+        if cap <= 1 or self.serve.eos_id is not None:
+            return 1
+        if not self._engine.fused_eligible():
+            return 1
+        if self._wave is not None:
+            rem = [h.decode_len - len(h.tokens)
+                   for h, d in zip(self._wave["handles"], self._wave["done"])
+                   if not d]
+        else:
+            if self._pending and self._free:
+                return 1               # a due/future arrival could admit
+            rem = [h.decode_len - len(h.tokens)
+                   for h in self._slot_handle
+                   if h is not None and not h.finished]
+        if not rem:
+            return 1
+        return max(1, min(int(cap), min(rem)))
+
+    def _decode_tick(self, T: int = 1) -> None:
+        """``T`` module-batched decode ticks over the full engine batch —
+        ONE fused device dispatch when the engine's fused path is eligible;
+        live slots emit their sampled tokens tick by tick, finishers are
+        handed to the policy's finish path."""
         engine, sampler = self._engine, self._sampler
         wave = self._wave
+        # rows the scheduler advances each tick: wave slots (finished
+        # members keep stepping until the drain) or handle-owning slots.
+        # Dead rows hold their stale token/position inside the chunk,
+        # exactly like per-tick stepping never updates a free slot.
+        live = np.zeros(self._b, bool)
+        if wave is not None:
+            live[wave["slots"]] = True
+        else:
+            live[[s for s in range(self._b)
+                  if self._slot_handle[s] is not None]] = True
         t0 = self._now()
-        lg = engine.decode_step(
-            jnp.asarray(self._cur),
-            jnp.asarray(np.minimum(self._pos, self._max_seq - 1)),
-        )
-        nxt = np.asarray(sampler.sample(lg))
+        mat = np.asarray(engine.decode_chunk(
+            jnp.asarray(self._cur), jnp.asarray(self._pos), sampler, T,
+            live=live,
+        ))
         now = self._now()
         self.report.decode_s += now - t0
-        counted = len(wave["slots"]) if wave is not None else self._b
-        live = [s for s in range(self._b)
-                if self._slot_handle[s] is not None
-                and not self._slot_handle[s].finished]
-        self.report.decode_slot_steps += counted
-        self.report.wasted_slot_steps += counted - len(live)
-        eos = self.serve.eos_id
-        for s in live:
-            h = self._slot_handle[s]
-            tk = int(nxt[s])
-            h._emit(tk)
-            if len(h.tokens) >= h.decode_len or (eos is not None and tk == eos):
-                self._finish_slot(s, now)
         if wave is not None:
-            # the wave keeps stepping finished slots until its slowest
-            # member drains — record their raw chain (paper §5.1 static
-            # batches; the waste is the mode's defining metric)
-            wave["ticks"] += 1
             wave["decode_s"] += now - t0
-            for s in wave["slots"]:
-                wave["rows"][s].append(int(nxt[s]))
-                self._cur[s] = nxt[s]
-                self._pos[s] += 1
-            if all(wave["done"]):
-                self._close_wave()
-        else:
-            for s in range(self._b):
-                if self._slot_handle[s] is not None:
+        counted = len(wave["slots"]) if wave is not None else self._b
+        eos = self.serve.eos_id
+        for t in range(T):
+            nxt = mat[:, t]
+            live = [s for s in range(self._b)
+                    if self._slot_handle[s] is not None
+                    and not self._slot_handle[s].finished]
+            self.report.decode_slot_steps += counted
+            self.report.wasted_slot_steps += counted - len(live)
+            for s in live:
+                h = self._slot_handle[s]
+                tk = int(nxt[s])
+                h._emit(tk)
+                if len(h.tokens) >= h.decode_len or (
+                        eos is not None and tk == eos):
+                    self._finish_slot(s, now)
+            if wave is not None:
+                # the wave keeps stepping finished slots until its slowest
+                # member drains — record their raw chain (paper §5.1 static
+                # batches; the waste is the mode's defining metric)
+                wave["ticks"] += 1
+                for s in wave["slots"]:
+                    wave["rows"][s].append(int(nxt[s]))
                     self._cur[s] = nxt[s]
                     self._pos[s] += 1
+                if all(wave["done"]):
+                    self._close_wave()
+                    break              # _chunk_T ends chunks at the drain
+            else:
+                for s in range(self._b):
+                    if self._slot_handle[s] is not None:
+                        self._cur[s] = nxt[s]
+                        self._pos[s] += 1
 
     def _finish_slot(self, s: int, now: float) -> None:
         h = self._slot_handle[s]

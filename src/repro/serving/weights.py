@@ -147,7 +147,21 @@ class ParamStore:
     # -- residency inspection -------------------------------------------
     @property
     def fully_resident(self) -> bool:
+        """True when every per-layer module is device-pinned — the
+        precondition for the engine's fused decode path (one donated launch
+        needs every layer's weights alive on device at once; streamed layers
+        keep the per-layer dispatch loop so the htod prefetch has a layer
+        boundary to hide behind)."""
         return all(not h for h in self._host)
+
+    def fused_layer_params(self) -> Tuple[Dict, ...]:
+        """Per-layer merged param dicts for the fused decode macro-step.
+
+        Only meaningful when ``fully_resident`` — the returned tuple aliases
+        the device-pinned arrays (no copies) and is captured once by the
+        engine for the lifetime of the store."""
+        assert self.fully_resident, "fused params require full residency"
+        return tuple(self.acquire(li) for li in range(len(self.schema)))
 
     def resident_module_bytes(self) -> int:
         return _tree_bytes(self.base) + sum(

@@ -261,3 +261,79 @@ def test_submit_rejects_oversized_and_never_fitting_requests():
     with pytest.raises(ValueError, match="arrival_s"):
         server.submit(Request(np.zeros(4, np.int32), 2,
                               arrival_s=float("nan")))
+
+
+def test_chunked_steps_match_per_tick_both_schedulers():
+    """Fused multi-token Server.step chunks are request-for-request
+    token-identical to per-tick stepping in BOTH scheduler modes, with
+    identical slot-step/waste accounting (chunks end exactly at finish
+    boundaries, so no scheduling event ever moves)."""
+    cfg, params = _mixtral()
+    p_lens, d_lens = [9, 12, 5, 7, 11, 6], [6, 14, 3, 9, 22, 5]
+
+    def requests():
+        rng = np.random.default_rng(3)
+        return [Request(rng.integers(0, cfg.vocab_size, n).astype(np.int32),
+                        d, sampling=(SamplingParams(temperature=0.7, seed=i)
+                                     if i % 2 else None))
+                for i, (n, d) in enumerate(zip(p_lens, d_lens))]
+
+    for sched in ("static", "continuous"):
+        reports = {}
+        for chunk in (1, 8):
+            plan = Plan(B=4, b_a=4, b_e=64, omega=0.0, decode_chunk=chunk)
+            srv = Server(cfg, params, plan,
+                         ServeConfig(scheduler=sched, decode_len=8,
+                                     max_seq=40))
+            for r in requests():
+                srv.submit(r)
+            reports[chunk] = srv.run()
+        a, b = reports[1], reports[8]
+        for x, y in zip(a.request_results, b.request_results):
+            assert np.array_equal(x.tokens, y.tokens), (sched, x.index)
+        assert a.decode_slot_steps == b.decode_slot_steps, sched
+        assert a.wasted_slot_steps == b.wasted_slot_steps, sched
+
+
+def test_chunking_disabled_with_eos_and_identical_results():
+    """An eos_id makes finishes unpredictable: _chunk_T degrades to
+    per-tick stepping (no behavior change vs decode_chunk=1)."""
+    cfg, params = _mixtral()
+    rng = np.random.default_rng(0)
+    reqs = [Request(rng.integers(1, cfg.vocab_size, 6).astype(np.int32), 12)
+            for _ in range(3)]
+    outs = []
+    for chunk in (1, 8):
+        plan = Plan(B=3, b_a=3, b_e=64, omega=0.0, decode_chunk=chunk)
+        srv = Server(cfg, params, plan,
+                     ServeConfig(decode_len=12, eos_id=0, max_seq=24))
+        for r in reqs:
+            srv.submit(Request(r.prompt.copy(), r.decode_len))
+        outs.append(srv.run())
+    for x, y in zip(outs[0].request_results, outs[1].request_results):
+        assert np.array_equal(x.tokens, y.tokens)
+
+
+def test_chunked_steps_match_per_tick_under_capacity_drops():
+    """Free slots + a capacity-starved plan (b_e=1 forces routed drops that
+    couple rows through the grouped dispatch): chunked stepping must still
+    match per-tick, because dead rows hold their stale token/position
+    inside the chunk exactly like per-tick stepping holds a free slot."""
+    cfg, params = _mixtral()
+    rng = np.random.default_rng(5)
+    # the shortest request finishes early and frees its slot with an empty
+    # queue, so later chunks decode with a dead row in the batch
+    reqs = [Request(rng.integers(0, cfg.vocab_size, n).astype(np.int32), d)
+            for n, d in zip([8, 6, 10], [3, 9, 6])]
+    results = {}
+    for chunk in (1, 4):
+        plan = Plan(B=4, b_a=4, b_e=1, omega=0.0, decode_chunk=chunk)
+        srv = Server(cfg, params, plan,
+                     ServeConfig(scheduler="continuous", decode_len=9,
+                                 max_seq=24))
+        for r in reqs:
+            srv.submit(Request(r.prompt.copy(), r.decode_len))
+        results[chunk] = srv.run()
+    for x, y in zip(results[1].request_results, results[4].request_results):
+        assert np.array_equal(x.tokens, y.tokens), x.index
+    assert results[4].expert_tokens_dropped == results[1].expert_tokens_dropped
