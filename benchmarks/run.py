@@ -15,7 +15,7 @@ import json
 
 
 def main() -> None:
-    from benchmarks import engine_walltime, kernels, paper_tables
+    from benchmarks import engine_walltime, kernels, kv_paging, paper_tables
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("only", nargs="?", default=None,
@@ -24,7 +24,8 @@ def main() -> None:
                     help="write the selected tables as JSON to PATH")
     args = ap.parse_args()
 
-    suites = list(paper_tables.ALL) + list(engine_walltime.ALL) + list(kernels.ALL)
+    suites = (list(paper_tables.ALL) + list(engine_walltime.ALL)
+              + list(kernels.ALL) + list(kv_paging.ALL))
     csv = []
     tables = []
     for fn in suites:

@@ -37,14 +37,24 @@ class Plan:
     #                             sizes it from the admission cadence; the
     #                             scheduler further clamps it to the shortest
     #                             live request so no eviction is due mid-chunk)
+    kv_page_tokens: int = 0     # paged tiered KV cache: tokens per page frame
+    #                             (0 = legacy contiguous buffers)
+    kv_device_pages: int = 0    # device page-pool frames the plan reserves
+    #                             (planner.kv_device_pool_frames sizes it from
+    #                             the Eq. 3 spare; 0 with paging on = Mode A,
+    #                             everything device-resident)
 
     def describe(self) -> str:
-        return (
+        out = (
             f"phase={self.phase} B={self.B} b_a={self.b_a} b_e={self.b_e} "
             f"w={self.omega:.1f} S_exp={self.s_expert/1e9:.1f}GB "
             f"S_par={self.s_params/1e9:.1f}GB reuse={self.weight_reuse} "
             f"T={self.decode_chunk}"
         )
+        if self.kv_page_tokens:
+            out += (f" pages={self.kv_page_tokens}tok"
+                    f"x{self.kv_device_pages}dev")
+        return out
 
 
 @dataclass

@@ -279,6 +279,137 @@ def _prefill_layer_module(cfg, kind, ffn, sctx, p, x, positions, lengths):
 
 
 # ---------------------------------------------------------------------------
+# Paged decode modules (Mode B: KV host tier — serving.cache.KVPageTable)
+# ---------------------------------------------------------------------------
+@_counted
+@functools.partial(jax.jit, static_argnames=("cfg", "span"),
+                   donate_argnames=("pk", "pv"))
+def _paged_attn_decode_module(cfg, span, p, x_mb, pk, pv, ek, ev, frames,
+                              pos, wpage, wframe):
+    """Device-path decode attention over paged KV.
+
+    ``pk``/``pv`` are the layer's DONATED device page pools
+    ``(P+1, pt, K, hd)`` (frame ``P`` is the null write sink); ``ek``/``ev``
+    the layer's streamed host frames ``(H, pt, K, hd)`` (the page-tier
+    analogue of a streamed weight module — fetched through the same
+    ``StreamWindow``).  ``frames`` (n, PP) indexes the concat of both, so
+    the gather reassembles each row's ``span`` exactly as the contiguous
+    buffer holds it; the attention math is then bit-for-bit
+    ``attn_decode`` on identical values.  The written page is extracted
+    per row and scattered back at ``wframe`` (host-destined rows scatter
+    into the null sink; the engine mirrors their write host-side from the
+    returned ``k_new``/``v_new``)."""
+    n = x_mb.shape[0]
+    pt = pk.shape[1]
+    PP = frames.shape[1]
+    allk = jnp.concatenate([pk, ek], axis=0)
+    allv = jnp.concatenate([pv, ev], axis=0)
+    tail = pk.shape[2:]
+    gk = allk[frames].reshape((n, PP * pt) + tail)[:, :span]
+    gv = allv[frames].reshape((n, PP * pt) + tail)[:, :span]
+    # the barrier pins the gather as a standalone producer, so the attn
+    # subgraph compiles exactly like the contiguous module's (bit-identity)
+    gk, gv = lax.optimization_barrier((gk, gv))
+    h = rms_norm(x_mb[:, None, :], p["norm1"], cfg.norm_eps)
+    y, upd = attn_mod.attn_decode(cfg, p["attn"], h, {"k": gk, "v": gv}, pos)
+    posv = jnp.broadcast_to(
+        jnp.atleast_1d(jnp.asarray(pos, jnp.int32)), (n,)
+    )
+    slot = jnp.where(cfg.sliding_window > 0, posv % span,
+                     jnp.minimum(posv, span - 1))
+    rows = jnp.arange(n)
+    k_new = upd["k"][rows, slot]
+    v_new = upd["v"][rows, slot]
+    pad = PP * pt - span
+    uk, uv = upd["k"], upd["v"]
+    if pad:
+        uk = jnp.pad(uk, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        uv = jnp.pad(uv, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    uk = uk.reshape((n, PP, pt) + tail)
+    uv = uv.reshape((n, PP, pt) + tail)
+    sel = wpage[:, None, None, None, None]
+    wk_page = jnp.take_along_axis(uk, sel, axis=1)[:, 0]
+    wv_page = jnp.take_along_axis(uv, sel, axis=1)[:, 0]
+    pk = pk.at[wframe].set(wk_page)
+    pv = pv.at[wframe].set(wv_page)
+    return y[:, 0], pk, pv, k_new, v_new
+
+
+@_counted
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _paged_attn_host_module(cfg, p, x_mb, gk, gv, pos):
+    """Host-path attention over GATHERED page rows: identical math to
+    ``_attn_decode_host_module`` (projections + rope on device, the §B
+    BF16-consistent mechanism via ``host_decode_attention``), but the
+    cache rows arrive pre-assembled from the host/device page pools
+    instead of sliced from a contiguous buffer.  Returns the written
+    ``k_new``/``v_new`` so the engine mirrors them into the right frame."""
+    from repro.models.layers import apply_rope
+
+    B = x_mb.shape[0]
+    h = rms_norm(x_mb[:, None, :], p["norm1"], cfg.norm_eps)
+    q, k_new, v_new = attn_mod._project_qkv(cfg, p["attn"], h)
+    posv = jnp.broadcast_to(
+        jnp.atleast_1d(jnp.asarray(pos, jnp.int32)), (B,)
+    )
+    posb = posv[:, None]
+    q = apply_rope(q, posb, cfg.rope_theta)
+    k_new = apply_rope(k_new, posb, cfg.rope_theta)
+    span = gk.shape[1]
+    slot = jnp.where(cfg.sliding_window > 0, posv % span,
+                     jnp.minimum(posv, span - 1))
+    rows = jnp.arange(B)
+    ck = gk.at[rows, slot].set(k_new[:, 0])
+    cv = gv.at[rows, slot].set(v_new[:, 0])
+    out = host_decode_attention(q[:, 0], ck, cv, posv)
+    o = out.reshape(B, 1, cfg.num_heads * cfg.head_dim).astype(x_mb.dtype)
+    y = o @ p["attn"]["wo"]
+    return y[:, 0], k_new[:, 0], v_new[:, 0]
+
+
+@_counted
+@functools.partial(jax.jit, donate_argnames=("pk", "pv"))
+def _paged_slot_write_module(pk, pv, frames, offs, kvals, vvals):
+    """Single-slot pool writes for host-path rows whose written page
+    spilled onto a device frame; padded to a fixed width with null-frame
+    sentinels (the sink absorbs the padding writes)."""
+    return (pk.at[frames, offs].set(kvals),
+            pv.at[frames, offs].set(vvals))
+
+
+@_counted
+@functools.partial(jax.jit, static_argnames=("cfg", "ffn", "sctx"))
+def _suffix_layer_module(cfg, ffn, sctx, p, x, pk, pv, pos0):
+    """One layer of SUFFIX prefill against a cached prefix (prefix-cache
+    hit admission): the suffix queries attend the stored prefix KV
+    concatenated with their own, offset to absolute positions ``pos0..``.
+    KV at position p depends only on tokens <= p, so the produced suffix
+    rows (and logits) are exactly what a full-prompt prefill would
+    compute — the shared span costs ZERO prefill launches."""
+    from repro.models.layers import apply_rope
+
+    B, S, _ = x.shape
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    q, k, v = attn_mod._project_qkv(cfg, p["attn"], h)
+    positions = pos0 + jnp.arange(S)[None, :]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    ck = jnp.concatenate([pk, k], axis=1)
+    cv = jnp.concatenate([pv, v], axis=1)
+    out = attn_mod.naive_attention(q, ck, cv, causal=True, q_offset=pos0)
+    o = out.reshape(B, S, cfg.num_heads * cfg.head_dim)
+    x = x + o @ p["attn"]["wo"]
+    if ffn == "moe":
+        hh = rms_norm(x, p["norm2"], cfg.norm_eps)
+        y, _ = moe_mod.moe_apply(cfg, p["moe"], hh, sctx)
+        x = x + y
+    elif cfg.d_ff > 0 and "ffn" in p:
+        hh = rms_norm(x, p["norm2"], cfg.norm_eps)
+        x = x + ffn_apply(p["ffn"], hh)
+    return x, k, v
+
+
+# ---------------------------------------------------------------------------
 # The fused decode macro-step (ONE launch per T-token chunk)
 # ---------------------------------------------------------------------------
 @_counted
@@ -406,6 +537,9 @@ class EngineStats:
     fused_dispatches: int = 0            # fused decode launches issued
     fused_ticks: int = 0                 # decode ticks served by fused launches
     decode_retraces: int = 0             # distinct fused (B, path, chunk) keys
+    kv_htod_bytes: int = 0               # streamed KV-page bytes copied htod
+    kv_dtoh_bytes: int = 0               # KV bytes spilled device->host
+    kv_stream_wait_s: float = 0.0        # stall waiting on page transfers
 
 
 class ModuleBatchingEngine:
@@ -460,6 +594,7 @@ class ModuleBatchingEngine:
         resident_bytes: Optional[float] = None,
         prefetch: bool = True,
         fused_decode: bool = True,
+        cache_config=None,
     ) -> None:
         assert expert_path in ("grouped", "loop"), expert_path
         self.cfg = cfg
@@ -468,6 +603,10 @@ class ModuleBatchingEngine:
         self.expert_path = expert_path
         self.grouped_prefill = grouped_prefill
         self.fused_decode = fused_decode
+        # KV paging (serving.cache): None / disabled keeps the legacy
+        # contiguous buffers; the table is (re)built per init_cache batch
+        self.cache_config = cache_config
+        self.pages = None
         if store is None:
             store = ParamStore.build(
                 cfg, params, plan, stream_weights=stream_weights,
@@ -507,25 +646,74 @@ class ModuleBatchingEngine:
         htod, wait = self.store.take_counters()
         self.stats.weight_htod_bytes += htod
         self.stats.prefetch_wait_s += wait
+        if self.pages is not None:
+            kv_htod, kv_dtoh, kv_wait = self.pages.take_counters()
+            self.stats.kv_htod_bytes += kv_htod
+            self.stats.kv_dtoh_bytes += kv_dtoh
+            self.stats.kv_stream_wait_s += kv_wait
         return self.stats
 
     # -- cache management ---------------------------------------------
     def init_cache(self, batch: int) -> None:
+        from repro.models.blocks import init_layer_cache
+
         self.cache = []
         self._batch = batch
-        for kind, _ in self.schema:
-            from repro.models.blocks import init_layer_cache
+        self.pages = None
+        cc = self.cache_config
+        if (cc is not None and cc.enabled
+                and any(k == "attn" for k, _ in self.schema)):
+            from repro.serving.cache import KVPageTable
 
-            self.cache.append(init_layer_cache(self.cfg, kind, batch, self.max_seq))
+            self.pages = KVPageTable(
+                self.cfg, self.schema, batch, self.max_seq, cc
+            )
+        paged_b = self.pages is not None and not self.pages.fully_resident
+        for kind, _ in self.schema:
+            if kind == "attn" and paged_b:
+                # Mode B: KV content lives in the page pools; the empty
+                # dict keeps the cache pytree tree.map/evict-safe
+                self.cache.append({})
+            else:
+                self.cache.append(
+                    init_layer_cache(self.cfg, kind, batch, self.max_seq)
+                )
 
     def _write_cache_rows(self, li: int, kind: str, entry: Dict, rows) -> None:
         """Insert a micro-batch's raw prefill cache into batch rows ``rows``
-        of layer ``li``'s decode buffer (``kvcache.insert_prefill_rows``)."""
-        from repro.serving.kvcache import insert_prefill_rows
+        of layer ``li``'s decode buffer (``kvcache.insert_prefill_rows``) —
+        or, under paging, into the rows' page frames (allocated on first
+        touch; the ω host-attention rows prefer the host tier so the page
+        placement generalizes the math-path split)."""
+        from repro.serving.kvcache import aligned_kv, insert_prefill_rows
 
+        if kind == "attn" and self.pages is not None:
+            rows_l = [int(r) for r in np.asarray(rows).reshape(-1)]
+            n_host = int(round(self.plan.omega * (self._batch or len(rows_l))))
+            self.pages.ensure_rows(
+                rows_l, prefer_host=[r < n_host for r in rows_l]
+            )
+            if not self.pages.fully_resident:
+                nk, nv = aligned_kv(
+                    self.cfg, entry["k"], entry["v"], self.pages.span
+                )
+                self.pages.insert_rows(li, nk, nv, rows_l)
+                return
         self.cache[li] = insert_prefill_rows(
             self.cfg, kind, self.cache[li], entry, rows
         )
+
+    def evict_slots(self, rows) -> None:
+        """Recycle batch slots: zero the contiguous rows (one donated
+        ``kvcache.evict_rows`` launch) and return any page frames to the
+        table's free lists.  THE slot-recycling entry point — callers must
+        not evict the cache list directly once paging is on."""
+        from repro.serving.kvcache import evict_rows
+
+        assert self.cache is not None
+        self.cache = evict_rows(self.cache, rows)
+        if self.pages is not None:
+            self.pages.free_rows([int(r) for r in np.asarray(rows).reshape(-1)])
 
     # -- phases ---------------------------------------------------------
     def _prefill_sctx(self, mb_tokens: int) -> ShardCtx:
@@ -607,14 +795,68 @@ class ModuleBatchingEngine:
             h_last = x_full[jnp.arange(n), lengths - 1]
         return _head_module(cfg, cfg.tie_embeddings, self.store.base, h_last)
 
+    # -- prefix caching ---------------------------------------------------
+    def read_prefix_rows(self, slot: int, pspan: int) -> List:
+        """Copy the first ``pspan`` KV slots of batch row ``slot`` out of
+        every attention layer as numpy ``(k, v)`` pairs — the capture side
+        of the prefix cache (host-side copies, safe to retain across the
+        donated decode ticks)."""
+        out = []
+        for li, (kind, _) in enumerate(self.schema):
+            assert kind == "attn", "prefix capture requires attention-only"
+            if self.pages is not None and not self.pages.fully_resident:
+                out.append(self.pages.read_row(li, slot, pspan))
+            else:
+                out.append((np.asarray(self.cache[li]["k"][slot, :pspan]),
+                            np.asarray(self.cache[li]["v"][slot, :pspan])))
+        return out
+
+    def prefill_prefix_hit(self, slot: int, prompt, prefix_kvs,
+                           pos0: int) -> jax.Array:
+        """Admit a prefix-cache HIT into batch row ``slot``: the stored
+        prefix KV rows are copied in (KV at position p depends only on
+        tokens <= p, so they equal what full prefill would write) and only
+        the suffix ``prompt[pos0:]`` is prefilled, its queries attending
+        prefix+suffix at absolute positions.  Launch count is
+        ``n_layers + 2`` (embed + one suffix module per layer + head) —
+        INDEPENDENT of the prefix length: the shared span costs zero
+        prefill launches.  Returns the (1, V) last-token logits."""
+        cfg = self.cfg
+        assert self.cache is not None
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        assert 0 < pos0 < len(prompt), (pos0, len(prompt))
+        suffix = jnp.asarray(prompt[pos0:])[None, :]
+        S_suf = int(suffix.shape[1])
+        x = _embed_module(cfg, self.store.base["embed"], suffix)
+        sctx = self._prefill_sctx(S_suf)
+        pos0j = jnp.asarray(pos0, jnp.int32)
+        for li, (kind, ffn) in enumerate(self.schema):
+            assert kind == "attn", "prefix cache requires attention-only"
+            p = self.store.acquire(li)
+            self.store.prefetch(li + 1)
+            pk = jnp.asarray(prefix_kvs[li][0])[None]
+            pv = jnp.asarray(prefix_kvs[li][1])[None]
+            x, ks, vs = _suffix_layer_module(cfg, ffn, sctx, p, x, pk, pv,
+                                             pos0j)
+            entry = {"k": jnp.concatenate([pk, ks], axis=1),
+                     "v": jnp.concatenate([pv, vs], axis=1)}
+            self._write_cache_rows(li, "attn", entry, [slot])
+        self.stats.attn_microbatches += 1
+        return _head_module(cfg, cfg.tie_embeddings, self.store.base,
+                            x[:, -1])
+
     # -- path selection ---------------------------------------------------
     def fused_eligible(self) -> bool:
         """True when decode can take the fused one-launch path: fused
         decode enabled, grouped expert dispatch, and EVERY weight resident
         on device (streamed layers keep the per-layer dispatch loop so the
-        htod prefetch has a layer boundary to overlap with)."""
+        htod prefetch has a layer boundary to overlap with).  Same contract
+        for KV pages: a fully-device-resident page pool (Mode A) keeps the
+        fused path BIT-identical, any host-tier page falls back to the
+        per-layer loop like streamed weights."""
         return (self.fused_decode and self.expert_path == "grouped"
-                and self.store.fully_resident)
+                and self.store.fully_resident
+                and (self.pages is None or self.pages.fully_resident))
 
     def _fused_layer_params(self) -> Tuple[Dict, ...]:
         if self._fused_params is None:
@@ -657,6 +899,8 @@ class ModuleBatchingEngine:
                 self.cache[li] = {"h": h, "conv": conv}
                 x = x + y
             self.store.prefetch(li + 1)     # before the FFN/grouped launch
+            if self.pages is not None:
+                self.pages.prefetch(li + 1)  # next layer's host KV frames
             if ffn == "moe":
                 x = x + self._expert_stage(p, x)
             elif cfg.d_ff > 0 and "ffn" in p:
@@ -676,6 +920,8 @@ class ModuleBatchingEngine:
         modules — each micro-batch's rows are updated in place; no
         whole-cache functional copy is made.
         """
+        if self.pages is not None and not self.pages.fully_resident:
+            return self._paged_attention_stage(li, p, x, pos, row0)
         cfg, plan = self.cfg, self.plan
         n = x.shape[0]
         B = self._batch or n
@@ -703,6 +949,98 @@ class ModuleBatchingEngine:
             lo = hi
         self.cache[li]["k"], self.cache[li]["v"] = k, v
         return jnp.concatenate(outs, axis=0)
+
+    def _paged_attention_stage(self, li, p, x, pos, row0: int = 0) -> jax.Array:
+        """Mode B decode attention (host-tier pages present).
+
+        The ω MATH-path split is unchanged from ``_attention_stage`` — rows
+        ``[0, round(ω·B))`` run the host-attention mechanism, the rest the
+        device mechanism — so paged decode stays token-identical to the
+        contiguous engine.  Page placement only decides where the KV BYTES
+        live: device rows gather their span from the device pool plus the
+        layer's streamed host frames in ONE launch (the htod copy prefetched
+        a layer ahead, like streamed weights); host rows assemble their
+        pages host-side and mirror their written slot back into whichever
+        tier owns the written page.
+        """
+        cfg, plan = self.cfg, self.plan
+        pages = self.pages
+        n = x.shape[0]
+        B = self._batch or n
+        n_host_rows = int(round(plan.omega * B))
+        pos_np = np.asarray(jnp.broadcast_to(
+            jnp.atleast_1d(jnp.asarray(pos, jnp.int32)), (n,)
+        ))
+        span, pt = pages.span, pages.page_tokens
+        if cfg.sliding_window:
+            wslot = pos_np % span
+        else:
+            wslot = np.minimum(pos_np, span - 1)
+        wpage = wslot // pt
+        woff = wslot % pt
+        rows_all = np.arange(row0, row0 + n)
+        nh = int((rows_all < n_host_rows).sum())   # host rows form a prefix
+        K, hd = cfg.num_kv_heads, cfg.head_dim
+        outs = []
+        if nh:
+            gk = np.zeros((nh, span, K, hd), pages._dtype)
+            gv = np.zeros_like(gk)
+            for i in range(nh):
+                gk[i], gv[i] = pages.read_row(li, int(rows_all[i]), span)
+            y_h, k_new_h, v_new_h = _paged_attn_host_module(
+                cfg, p, x[:nh], jnp.asarray(gk), jnp.asarray(gv),
+                jnp.asarray(pos_np[:nh]),
+            )
+            outs.append(y_h)
+            k_np, v_np = np.asarray(k_new_h), np.asarray(v_new_h)
+            dev_writes = []
+            for i in range(nh):
+                f = int(pages.page_map[int(rows_all[i]), int(wpage[i])])
+                if f >= pages.device_frames:
+                    pages.write_host_slot(
+                        li, f - pages.device_frames, int(woff[i]),
+                        k_np[i], v_np[i],
+                    )
+                elif f >= 0:            # ω row spilled onto a device frame
+                    dev_writes.append((f, int(woff[i]), i))
+            if dev_writes:
+                width = max(8, -(-len(dev_writes) // 8) * 8)
+                fr = np.full(width, pages.device_frames, np.int32)  # null pad
+                off = np.zeros(width, np.int32)
+                ksel = np.zeros((width, K, hd), k_np.dtype)
+                vsel = np.zeros_like(ksel)
+                for j, (f, o, i) in enumerate(dev_writes):
+                    fr[j], off[j] = f, o
+                    ksel[j], vsel[j] = k_np[i], v_np[i]
+                pages.pool_k[li], pages.pool_v[li] = _paged_slot_write_module(
+                    pages.pool_k[li], pages.pool_v[li],
+                    jnp.asarray(fr), jnp.asarray(off),
+                    jnp.asarray(ksel), jnp.asarray(vsel),
+                )
+            self.stats.attn_microbatches += 1
+            self.stats.host_attn_tokens += nh
+        nd = n - nh
+        if nd:
+            didx = [int(r) for r in rows_all[nh:]]
+            frames = jnp.asarray(pages.gather_indices(didx))
+            wframe, host_writes = pages.write_targets(didx, wpage[nh:])
+            ek, ev = pages.acquire(li)
+            y_d, pk, pv, k_new, v_new = _paged_attn_decode_module(
+                cfg, span, p, x[nh:], pages.pool_k[li], pages.pool_v[li],
+                ek, ev, frames, jnp.asarray(pos_np[nh:]),
+                jnp.asarray(wpage[nh:]), jnp.asarray(wframe),
+            )
+            pages.pool_k[li], pages.pool_v[li] = pk, pv
+            if host_writes:             # device row's written page is host-side
+                k_np, v_np = np.asarray(k_new), np.asarray(v_new)
+                for i, hf in host_writes:
+                    pages.write_host_slot(
+                        li, hf, int(woff[nh + i]), k_np[i], v_np[i]
+                    )
+            outs.append(y_d)
+            self.stats.attn_microbatches += 1
+            self.stats.device_attn_tokens += nd
+        return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
 
     def _expert_stage(self, p, x) -> jax.Array:
         if self.expert_path == "grouped":

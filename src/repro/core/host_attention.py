@@ -5,6 +5,15 @@ KV-cache lives, saving HtoD bandwidth for expert prefetch.  The paper's
 numerical-consistency scheme (§B) is reproduced exactly: BF16 operands are
 represented in FP32 with trailing mantissa bits zeroed, accumulation happens
 in FP32, and each dot-product result is rounded back to BF16.
+
+With the paged tiered cache (``serving.cache``) the ω split decides only
+the MATH placement — which rows' attention runs through this module —
+while ``KVPageTable`` decides where their KV BYTES live: ω host rows
+prefer host-tier page frames (``ensure_rows(prefer_host=...)``) so their
+pages are read host-side without a DtoH copy, but either tier can spill
+into the other, and ``ModuleBatchingEngine._paged_attention_stage``
+assembles whatever placement resulted.  Keeping math and storage
+independent is what preserves bit-identity with the contiguous cache.
 """
 from __future__ import annotations
 

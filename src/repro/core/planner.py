@@ -139,13 +139,40 @@ def device_memory_used(
         else:
             cap = max(1, min(plan.b_e, tokens))
         s_is += W.expert_buffer_bytes(cfg, cap)
-    return plan.s_params + plan.s_expert + s_dense + kv_gpu + s_is
+    # paged KV: the device page pool (+1 null write-sink frame) is a
+    # standing Eq. 3 charge on top of the per-launch gather working set
+    kv_pool = 0.0
+    if plan.kv_page_tokens > 0 and plan.kv_device_pages > 0:
+        kv_pool = (plan.kv_device_pages + 1) * W.kv_page_frame_bytes(
+            cfg, plan.kv_page_tokens
+        )
+    return plan.s_params + plan.s_expert + s_dense + kv_gpu + s_is + kv_pool
 
 
 def device_memory_ok(
     cfg: ModelConfig, hw: HardwareProfile, plan: Plan, ctx: int, phase: str
 ) -> bool:
     return device_memory_used(cfg, plan, ctx, phase) <= hw.device_mem_bytes
+
+
+def kv_device_pool_frames(
+    cfg: ModelConfig, hw: HardwareProfile, plan: Plan, ctx: int,
+    page_tokens: int,
+) -> int:
+    """Size the paged KV device pool from the Eq. 3 spare: how many page
+    frames fit on device AFTER the plan's weights, stream window, dispatch
+    buffers and activations are charged.  The remainder of the batch's
+    frames live on the host tier (Mode B — streamed like expert weights).
+    Returns 0 when nothing is spare (every frame host-side)."""
+    assert page_tokens > 0
+    base = replace(plan, kv_page_tokens=0, kv_device_pages=0)
+    spare = hw.device_mem_bytes - device_memory_used(
+        cfg, base, ctx, plan.phase
+    )
+    fb = W.kv_page_frame_bytes(cfg, page_tokens)
+    if fb <= 0 or spare <= fb:              # +1 null frame must fit too
+        return 0
+    return int(spare // fb) - 1
 
 
 # ---------------------------------------------------------------------------

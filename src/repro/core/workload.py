@@ -74,12 +74,29 @@ def kv_bytes_per_token_layer(cfg: ModelConfig) -> float:
     return 2 * cfg.num_kv_heads * cfg.head_dim * BYTES
 
 
-def kv_bytes_per_seq(cfg: ModelConfig, ctx: int) -> float:
-    """Full KV cache of one sequence across all attention layers."""
+def kv_page_frame_bytes(cfg: ModelConfig, page_tokens: int) -> float:
+    """Bytes of ONE page frame across every attention layer (K + V):
+    the allocation unit of the paged tiered cache
+    (``serving.cache.KVPageTable.frame_bytes``)."""
+    n_attn = sum(
+        1 for i in range(cfg.num_layers) if cfg.layer_kind(i) == "attn"
+    )
+    return n_attn * page_tokens * kv_bytes_per_token_layer(cfg)
+
+
+def kv_bytes_per_seq(cfg: ModelConfig, ctx: int, page_tokens: int = 0) -> float:
+    """Full KV cache of one sequence across all attention layers.
+
+    ``page_tokens > 0`` rounds each attention span UP to whole pages — the
+    paged cache allocates frame-granular, so admission must charge the
+    rounded extent (a 17-token span holds a 32-token page at
+    ``page_tokens=32``)."""
     total = 0.0
     for i in range(cfg.num_layers):
         if cfg.layer_kind(i) == "attn":
             span = min(ctx, cfg.sliding_window) if cfg.sliding_window else ctx
+            if page_tokens > 0:
+                span = -(-span // page_tokens) * page_tokens
             total += span * kv_bytes_per_token_layer(cfg)
     # SSM layers carry an O(1) state instead
     for i in range(cfg.num_layers):

@@ -71,6 +71,18 @@ def main() -> None:
     ap.add_argument("--no-prefetch", action="store_true",
                     help="disable the async prefetch (streamed-serial: "
                          "fetch-on-demand, copy serialized with compute)")
+    ap.add_argument("--kv-page-tokens", type=int, default=0,
+                    help="page the KV cache into fixed-size blocks of this "
+                         "many tokens (0 = the contiguous cache); pages "
+                         "beyond the device pool budget live host-side and "
+                         "stream through the prefetch window")
+    ap.add_argument("--device-kv-gb", type=float, default=None,
+                    help="device page-pool budget (GB); default keeps every "
+                         "page frame on device (Mode A, bookkeeping only)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="cache shared prompt prefixes at page granularity "
+                         "and admit hits by page-row copy instead of "
+                         "recomputing prefill (requires --kv-page-tokens)")
     args = ap.parse_args()
 
     hw = PROFILES[args.profile]
@@ -144,11 +156,31 @@ def main() -> None:
             prefetch=not args.no_prefetch,
         )
         print(f"realized residency (smoke): {store.describe()}")
+    if args.kv_page_tokens:
+        # page-pool residency at the serving shape, printed up front (the
+        # table the scheduler's engines will build)
+        from repro.serving.cache import CacheConfig, KVPageTable
+
+        probe = KVPageTable(
+            cfg,
+            [(cfg.layer_kind(i), cfg.ffn_kind(i))
+             for i in range(cfg.num_layers)],
+            args.batch, args.prompt_len + args.decode_len,
+            CacheConfig(
+                page_tokens=args.kv_page_tokens,
+                device_pool_bytes=(None if args.device_kv_gb is None
+                                   else args.device_kv_gb * 1e9),
+            ),
+        )
+        print(f"page-pool residency (smoke): {probe.describe()}")
     report = serve_dataset(cfg, params, requests, plan, args.decode_len,
                            expert_path=args.expert_path,
                            scheduler=args.scheduler, eos_id=args.eos_id,
                            store=store,
-                           hw=hw if args.scheduler == "continuous" else None)
+                           hw=hw if args.scheduler == "continuous" else None,
+                           kv_page_tokens=args.kv_page_tokens,
+                           device_kv_gb=args.device_kv_gb,
+                           prefix_cache=args.prefix_cache)
     print(f"served {args.requests} requests in {report.total_s:.2f}s "
           f"({report.decode_throughput:.1f} decode tok/s on this host, "
           f"{report.expert_tokens_dropped} routed copies dropped)")
@@ -164,6 +196,13 @@ def main() -> None:
     if stream:
         print(f"weight streaming: {report.htod_gb:.3f}GB htod, "
               f"prefetch stall {report.prefetch_wait_s:.3f}s")
+    if args.kv_page_tokens:
+        print(f"kv paging: {report.kv_htod_bytes / 1e6:.3f}MB page htod, "
+              f"{report.kv_dtoh_bytes / 1e6:.3f}MB dtoh")
+        if args.prefix_cache:
+            print(f"prefix cache: {report.prefix_hits} hits / "
+                  f"{report.prefix_hits + report.prefix_misses} lookups "
+                  f"(hit rate {report.prefix_hit_rate:.0%})")
     if report.admission_deferrals:
         print(f"admissions deferred by the Eq. 2 host KV budget: "
               f"{report.admission_deferrals}")

@@ -1,6 +1,8 @@
 """Serving surface: the request-lifecycle server, offline wrapper, sampling,
-arrival processes, KV plumbing and the streamed parameter store."""
+arrival processes, the paged tiered KV cache and the streamed parameter
+store."""
 from repro.serving import arrivals
+from repro.serving.cache import CacheConfig, KVPageTable, PrefixStore
 from repro.serving.generate import greedy_generate
 from repro.serving.kvcache import cache_from_prefill
 from repro.serving.sampling import BatchSampler, SamplingParams
@@ -23,9 +25,12 @@ __all__ = [
     "BatchResult",
     "BatchSampler",
     "cache_from_prefill",
+    "CacheConfig",
     "greedy_generate",
+    "KVPageTable",
     "pad_requests",
     "ParamStore",
+    "PrefixStore",
     "Request",
     "RequestHandle",
     "RequestResult",

@@ -7,6 +7,12 @@ position p lives in slot ``p % window``), and provides the slot-wise
 insert/evict primitives the continuous scheduler uses to recycle batch
 slots mid-flight (a finished sequence's KV rows and SSM state are
 overwritten by the next admitted request).
+
+These free functions are the CONTIGUOUS-buffer primitives of the cache
+API; the paged tier (``serving.cache.KVPageTable``) builds on them —
+``aligned_kv`` produces the span-aligned rows its page splitter consumes,
+and ``insert_prefill_rows``/``evict_rows`` remain the Mode A (fully
+device-resident) fast path the engine routes through.
 """
 from __future__ import annotations
 
@@ -15,6 +21,7 @@ from typing import List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import model as model_mod
@@ -114,20 +121,53 @@ def _evict_module(cache, rows):
     )
 
 
+# distinct padded eviction widths seen: each width is ONE cached trace of
+# _evict_module (per cache pytree structure) — the retrace-counter analogue
+# of EngineStats.decode_retraces, asserted in tests
+_EVICT_WIDTHS: set = set()
+
+
+def evict_retraces() -> int:
+    """Number of distinct padded ``rows`` widths ``evict_rows`` has jitted
+    with since import (eviction-set sizes 1..8 all share width 8)."""
+    return len(_EVICT_WIDTHS)
+
+
+def _pad_evict_rows(rows: Sequence[int]) -> np.ndarray:
+    """Pad an eviction set to a fixed trace width (multiple of 8, min 8)
+    by repeating the first row as a sentinel: ``rows`` is a traced shape
+    in ``_evict_module``, so un-padded calls retrace per distinct set
+    size.  Duplicate indices are harmless — zeroing a row twice is
+    idempotent."""
+    rows = np.asarray(rows, np.int32).reshape(-1)
+    width = max(8, int(-(-rows.size // 8) * 8))
+    padded = np.full(width, rows[0], np.int32)
+    padded[: rows.size] = rows
+    _EVICT_WIDTHS.add(width)
+    return padded
+
+
 def evict_rows(cache: List, rows: Sequence[int]) -> List:
     """Zero batch rows across every layer buffer (slot recycling).
 
     Not required for correctness — decode masks by per-sequence position
     and insertion overwrites whole rows — but keeps freed slots inert
-    between eviction and the next admission.
+    between eviction and the next admission.  (In the paged Mode B the
+    attention entries are empty dicts and the page table recycles frames
+    instead — ``ModuleBatchingEngine.evict_slots`` routes both.)
 
     One jitted launch with the cache pytree DONATED: the rows are zeroed in
     place instead of functionally copying every (B, S, ...) buffer per
     eviction.  The caller's cache reference is consumed — assign the return
     value back (the engine owns the cache between ticks; see the ROADMAP
-    donation contract).
+    donation contract).  The row set is padded to a fixed width so slot
+    recycling stays one cached launch across eviction-set sizes
+    (``evict_retraces``).
     """
-    return list(_evict_module(tuple(cache), jnp.asarray(rows)))
+    rows = np.asarray(rows).reshape(-1)
+    if rows.size == 0:
+        return list(cache)
+    return list(_evict_module(tuple(cache), jnp.asarray(_pad_evict_rows(rows))))
 
 
 def cache_bytes(cache: List) -> int:

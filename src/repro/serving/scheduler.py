@@ -54,6 +54,9 @@ def serve_dataset(
     prefetch: bool = True,
     hw: Optional[HardwareProfile] = None,
     store: Optional[ParamStore] = None,
+    kv_page_tokens: int = 0,
+    device_kv_gb: Optional[float] = None,
+    prefix_cache: bool = False,
 ) -> ServeReport:
     """Serve a fixed request list to completion (the offline protocol).
 
@@ -97,6 +100,8 @@ def serve_dataset(
             scheduler=scheduler, decode_len=decode_len, max_seq=max_seq,
             max_prompt_len=max_prompt_len, pad_id=pad_id, eos_id=eos_id,
             expert_path=expert_path, grouped_prefill=grouped_prefill, hw=hw,
+            kv_page_tokens=kv_page_tokens, device_kv_gb=device_kv_gb,
+            prefix_cache=prefix_cache,
         ),
         stream=StreamConfig(
             stream_weights=stream_weights, resident_bytes=resident_bytes,

@@ -58,7 +58,6 @@ from repro.configs.base import ModelConfig
 from repro.core import workload as W
 from repro.core.dag_builder import Plan
 from repro.core.hardware import HardwareProfile
-from repro.serving.kvcache import evict_rows
 from repro.serving.sampling import BatchSampler, SamplingParams
 from repro.serving.weights import ParamStore
 
@@ -79,7 +78,18 @@ class ServeConfig:
     """Scheduling-side knobs, frozen (was: the ``serve_dataset`` kwarg
     sprawl).  ``decode_len`` is the fallback for requests whose own field
     is zero/None; ``hw`` enables Eq. 2 memory-gated admission in the
-    continuous scheduler."""
+    continuous scheduler.
+
+    KV-cache knobs (the ``serving.cache`` tier): ``kv_page_tokens > 0``
+    pages the cache; ``device_kv_gb`` caps the device page pool (the
+    remainder streams from the host tier); ``prefix_cache`` admits repeated
+    prompt prefixes by copying cached page rows instead of recomputing
+    prefill (attention-only models without a sliding window).
+
+    ``from_plan`` builds a config sized by the planner up front —
+    ``max_batch``/``max_seq`` come from ``planner.search_decode`` instead
+    of the first step's submitted queue.
+    """
 
     scheduler: str = "static"
     decode_len: int = 32
@@ -92,10 +102,53 @@ class ServeConfig:
     hw: Optional[HardwareProfile] = None
     decode_chunk: Optional[int] = None   # fused chunk T cap (None = plan's);
     #                                      1 disables multi-token stepping
+    kv_page_tokens: int = 0              # page the KV cache (0 = contiguous)
+    device_kv_gb: Optional[float] = None  # device page-pool cap (None = all)
+    prefix_cache: bool = False           # reuse shared prompt prefixes
+    max_batch: Optional[int] = None      # engine slots (None = sized at the
+    #                                      first step from the submitted queue)
+    plan: Optional[Plan] = None          # planner-produced Plan (from_plan);
+    #                                      used when Server gets plan=None
 
     def __post_init__(self) -> None:
         assert self.scheduler in ("static", "continuous"), self.scheduler
         assert self.expert_path in ("grouped", "loop"), self.expert_path
+        assert self.kv_page_tokens >= 0, self.kv_page_tokens
+        if self.prefix_cache:
+            assert self.kv_page_tokens > 0, (
+                "prefix_cache requires paging (kv_page_tokens > 0)"
+            )
+        if self.max_batch is not None:
+            assert self.max_batch >= 1, self.max_batch
+
+    @classmethod
+    def from_plan(
+        cls,
+        cfg: ModelConfig,
+        hw: HardwareProfile,
+        ctx: int = 512,
+        scheduler: str = "continuous",
+        B: Optional[int] = None,
+        **overrides,
+    ) -> "ServeConfig":
+        """Size the serving config from the planner: runs
+        ``planner.search_decode(cfg, hw, ctx)`` and pins ``max_batch`` to
+        the plan's B, ``max_seq`` to ``ctx``, and ``hw`` for Eq. 2 gated
+        admission — so the server allocates its engine up front instead of
+        from whatever happens to be queued at the first step.  ``B`` caps
+        the searched batch (Eq. 2 makes the host limit of a smoke-scale
+        config astronomical — cap it to what the workload and this
+        machine's memory actually support).  Keyword overrides win over
+        the derived fields; the Plan rides along in ``.plan`` (pass
+        ``Server(cfg, params, plan=None, serve=...)``)."""
+        from repro.core.planner import search_decode
+
+        plan = search_decode(cfg, hw, ctx, B=B, scheduler=scheduler,
+                             decode_len=overrides.get("decode_len")).plan
+        kw = dict(scheduler=scheduler, max_seq=ctx, max_batch=plan.B,
+                  hw=hw, plan=plan)
+        kw.update(overrides)
+        return cls(**kw)
 
 
 @dataclass(frozen=True)
@@ -140,6 +193,13 @@ class ServeReport:
     weight_htod_bytes: int = 0    # streamed weight bytes copied host->device
     prefetch_wait_s: float = 0.0  # stall waiting on weight transfers
     admission_deferrals: int = 0  # admissions blocked by the Eq. 2 KV budget
+    kv_htod_bytes: int = 0        # streamed KV-page bytes copied host->device
+    kv_dtoh_bytes: int = 0        # KV bytes spilled device->host
+    prefix_hits: int = 0          # admissions served from the prefix cache
+    prefix_misses: int = 0        # eligible admissions that prefilled cold
+    prefill_tokens: int = 0       # token-positions actually computed in prefill
+    #   (full prompts on a miss, suffix only on a prefix hit — the gap vs
+    #   sum(len(prompt)) is the prefill work the prefix cache skipped)
     _expert_dropped: int = 0      # drops counted outside BatchResults
 
     @property
@@ -150,6 +210,20 @@ class ServeReport:
     def htod_gb(self) -> float:
         """Streamed weight traffic in GB (0 when everything is resident)."""
         return self.weight_htod_bytes / 1e9
+
+    @property
+    def kv_htod_gb(self) -> float:
+        """Streamed KV-page traffic in GB (0 without a host tier)."""
+        return self.kv_htod_bytes / 1e9
+
+    @property
+    def kv_dtoh_gb(self) -> float:
+        return self.kv_dtoh_bytes / 1e9
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        n = self.prefix_hits + self.prefix_misses
+        return self.prefix_hits / n if n else 0.0
 
     @property
     def decode_tokens(self) -> int:
@@ -310,11 +384,16 @@ class Server:
         self,
         cfg: ModelConfig,
         params: Dict,
-        plan: Plan,
+        plan: Optional[Plan] = None,
         serve: ServeConfig = ServeConfig(),
         stream: StreamConfig = StreamConfig(),
         store: Optional[ParamStore] = None,
     ) -> None:
+        if plan is None:
+            plan = serve.plan
+        assert plan is not None, (
+            "pass a Plan, or a ServeConfig built by ServeConfig.from_plan"
+        )
         self.cfg = cfg
         self.params = params
         self.plan = plan
@@ -322,6 +401,14 @@ class Server:
         self.stream = stream
         self.report = ServeReport(scheduler=serve.scheduler)
         self._store = store
+        # prefix cache (needs paging; attention-only, no sliding window —
+        # SSM state / ring alignment make prefixes non-transplantable)
+        self._prefix = None
+        if serve.prefix_cache:
+            from repro.serving.cache import PrefixStore
+
+            if PrefixStore.supported(cfg):
+                self._prefix = PrefixStore(serve.kv_page_tokens)
         self._engine = None               # ModuleBatchingEngine, built lazily
         self._sampler: Optional[BatchSampler] = None
         self._handles: List[RequestHandle] = []
@@ -329,7 +416,7 @@ class Server:
         self._t0: Optional[float] = None
         self._max_seq: Optional[int] = serve.max_seq
         # engine-stat totals already drained into the report
-        self._seen = {"drop": 0, "htod": 0, "wait": 0.0}
+        self._seen = {"drop": 0, "htod": 0, "wait": 0.0, "kvh": 0, "kvd": 0}
         # Eq. 2 admission budget (continuous): every in-flight sequence's
         # offloaded KV/state at its FULL prompt+decode extent must fit
         # m_c - S_Model, so a sequence can never outgrow the host mid-decode
@@ -377,7 +464,12 @@ class Server:
                 f"max_prompt_len to truncate long prompts"
             )
         if self._kv_budget is not None:
-            need = W.kv_bytes_per_seq(self.cfg, len(prompt) + dec)
+            # frame-granular admission: the paged cache allocates whole
+            # pages, so the charge is the page-rounded extent
+            need = W.kv_bytes_per_seq(
+                self.cfg, len(prompt) + dec,
+                page_tokens=self.serve.kv_page_tokens,
+            )
             if need > self._kv_budget:
                 raise ValueError(
                     f"request {i}: KV/state bytes {need:.3e} can never fit "
@@ -426,7 +518,12 @@ class Server:
                 stream_weights=st.stream_weights,
                 resident_bytes=st.resident_bytes, prefetch=st.prefetch,
             )
-        self._b = max(1, min(self.plan.B, len(self._handles) or 1))
+        if self.serve.max_batch is not None:
+            # planner-sized up front (ServeConfig.from_plan): the engine
+            # batch no longer depends on what was queued at the first step
+            self._b = max(1, min(self.plan.B, int(self.serve.max_batch)))
+        else:
+            self._b = max(1, min(self.plan.B, len(self._handles) or 1))
         if self._max_seq is None:
             self._max_seq = max(
                 len(h.prompt) + h.decode_len for h in self._handles
@@ -435,6 +532,7 @@ class Server:
             self.cfg, self.params, self.plan, max_seq=self._max_seq,
             expert_path=self.serve.expert_path,
             grouped_prefill=self.serve.grouped_prefill, store=self._store,
+            cache_config=self._cache_config(),
         )
         self._engine.init_cache(self._b)
         self._sampler = BatchSampler(self._b)
@@ -442,6 +540,21 @@ class Server:
         self._slot_handle = [None] * self._b
         self._cur = np.zeros(self._b, np.int32)
         self._pos = np.zeros(self._b, np.int64)
+
+    def _cache_config(self):
+        """The ``CacheConfig`` realized from the serve knobs (None when
+        paging is off — the engine keeps its contiguous buffers)."""
+        if self.serve.kv_page_tokens <= 0:
+            return None
+        from repro.serving.cache import CacheConfig
+
+        budget = (None if self.serve.device_kv_gb is None
+                  else float(self.serve.device_kv_gb) * 1e9)
+        return CacheConfig(
+            page_tokens=self.serve.kv_page_tokens,
+            device_pool_bytes=budget,
+            prefix_cache=self._prefix is not None,
+        )
 
     def _drain_engine_stats(self) -> int:
         """Fold the engine's cumulative counters into the report (deltas
@@ -452,9 +565,13 @@ class Server:
         d_drop = st.expert_tokens_dropped - self._seen["drop"]
         self.report.weight_htod_bytes += st.weight_htod_bytes - self._seen["htod"]
         self.report.prefetch_wait_s += st.prefetch_wait_s - self._seen["wait"]
+        self.report.kv_htod_bytes += st.kv_htod_bytes - self._seen["kvh"]
+        self.report.kv_dtoh_bytes += st.kv_dtoh_bytes - self._seen["kvd"]
         self._seen = {"drop": st.expert_tokens_dropped,
                       "htod": st.weight_htod_bytes,
-                      "wait": st.prefetch_wait_s}
+                      "wait": st.prefetch_wait_s,
+                      "kvh": st.kv_htod_bytes,
+                      "kvd": st.kv_dtoh_bytes}
         return d_drop
 
     # -- the step-driven core ---------------------------------------------
@@ -497,6 +614,9 @@ class Server:
     def finalize(self) -> ServeReport:
         """Drain engine counters and order results; idempotent."""
         self.report._expert_dropped += self._drain_engine_stats()
+        if self._prefix is not None:
+            self.report.prefix_hits = self._prefix.hits
+            self.report.prefix_misses = self._prefix.misses
         self.report.request_results.sort(key=lambda r: r.index)
         return self.report
 
@@ -574,29 +694,67 @@ class Server:
                       slots: List[int]) -> None:
         """One batched prefill of ``handles`` into ``slots``: writes their
         KV/state rows, arms their sampler slots, and emits each request's
-        FIRST token (sampled from the prefill logits)."""
+        FIRST token (sampled from the prefill logits).
+
+        With the prefix cache on, the wave is partitioned: HITS are
+        admitted per handle through ``engine.prefill_prefix_hit`` (the
+        stored prefix pages are copied in; only the suffix is computed —
+        zero prefill launches for the shared span), MISSES take the
+        batched prefill and donate their prefix rows to the store
+        afterwards.  Tokens are identical either way (per-slot seeded
+        sampling; copied KV equals recomputed KV)."""
         engine, sampler = self._engine, self._sampler
-        ptoks, lens = pad_requests(handles, self.serve.pad_id)
         t0 = self._now()
-        lg = engine.prefill_slots(jnp.asarray(ptoks), slots, lengths=lens)
+        hits: List = []
+        misses, miss_slots = list(handles), list(slots)
+        if self._prefix is not None:
+            hits, misses, miss_slots = [], [], []
+            for h, s in zip(handles, slots):
+                kp = self._prefix.key(h.prompt)
+                kvs = None if kp is None else self._prefix.get(kp[0])
+                if kvs is not None:
+                    hits.append((h, s, kp[1], kvs))
+                else:
+                    misses.append(h)
+                    miss_slots.append(s)
         for h, s in zip(handles, slots):
             sampler.set_slot(s, h.sampling)
-        tok0 = np.asarray(sampler.sample(lg, slots))
+        tok0: Dict[int, int] = {}
+        if misses:
+            self.report.prefill_tokens += sum(len(h.prompt) for h in misses)
+            ptoks, lens = pad_requests(misses, self.serve.pad_id)
+            lg = engine.prefill_slots(jnp.asarray(ptoks), miss_slots,
+                                      lengths=lens)
+            for s, tk in zip(miss_slots,
+                             np.asarray(sampler.sample(lg, miss_slots))):
+                tok0[s] = int(tk)
+            if self._prefix is not None:
+                for h, s in zip(misses, miss_slots):
+                    kp = self._prefix.key(h.prompt)
+                    if kp is not None:
+                        self._prefix.put(
+                            kp[0], engine.read_prefix_rows(s, kp[1])
+                        )
+        for h, s, pspan, kvs in hits:
+            self.report.prefill_tokens += len(h.prompt) - pspan
+            lg = engine.prefill_prefix_hit(s, h.prompt, kvs, pspan)
+            tok0[s] = int(np.asarray(sampler.sample(lg, [s]))[0])
         now = self._now()
         self.report.prefill_s += now - t0
         if self._wave is not None:
             self._wave["prefill_s"] += now - t0
         eos = self.serve.eos_id
-        for h, s, tk, ln in zip(handles, slots, tok0, lens):
+        for h, s in zip(handles, slots):
+            tk = tok0[s]
             self._slot_handle[s] = h
-            self._pos[s] = int(ln)
+            self._pos[s] = len(h.prompt)
             self._cur[s] = tk
             h.status = "running"
             h.admit_s = t0
             h.first_token_s = now
-            h._emit(int(tk))
+            h._emit(tk)
             if self._wave is not None:
-                self._wave["rows"][s] = [int(tk)]
+                self._wave["rows"][s] = [tk]
             if h.decode_len <= 1 or (eos is not None and tk == eos):
                 self._finish_slot(s, now)
 
@@ -708,7 +866,7 @@ class Server:
             self._live_kv -= self._kv_need[h.index]
         self._slot_handle[s] = None
         self._sampler.clear_slot(s)
-        self._engine.cache = evict_rows(self._engine.cache, [s])
+        self._engine.evict_slots([s])
         self._free.append(s)
 
     def _close_wave(self) -> None:
@@ -721,7 +879,7 @@ class Server:
             self.report.request_results.append(h.result())
             self._slot_handle[s] = None
             self._sampler.clear_slot(s)
-        self._engine.cache = evict_rows(self._engine.cache, wave["slots"])
+        self._engine.evict_slots(wave["slots"])
         self._free = deque(range(self._b))
         mat = np.asarray([wave["rows"][s] for s in wave["slots"]], np.int64)
         self.report.results.append(BatchResult(

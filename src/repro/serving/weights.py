@@ -64,6 +64,70 @@ def _to_host(tree):
     return jax.tree.map(np.asarray, tree)
 
 
+class StreamWindow:
+    """Bounded in-flight window of async htod transfers (the double buffer).
+
+    The generic half of the PR 3 streaming design, shared by weight
+    streaming (``ParamStore``) and KV-page streaming
+    (``serving.cache.KVPageTable``): ``prefetch(key)`` issues the async
+    ``jax.device_put`` copy produced by the ``fetch`` closure and parks it
+    in a window of at most ``depth`` in-flight entries (oldest evicted);
+    ``acquire(key)`` consumes the in-flight transfer — or fetches on
+    demand when it was never staged — and accounts the stall seconds spent
+    blocking on it.  ``fetch(key) -> (value, nbytes)`` must return the
+    device-side value plus the bytes it moved; copies are issued at
+    prefetch/fetch time, so ``htod_bytes`` counts issue-side traffic.
+    """
+
+    def __init__(self, fetch, depth: int = 2, enabled: bool = True) -> None:
+        self._fetch = fetch
+        self.depth = max(1, depth)
+        self.enabled = enabled
+        self.inflight: Dict = {}
+        self._order: List = []
+        self.htod_bytes = 0
+        self.wait_s = 0.0
+        self.issued = 0
+        self.demand = 0
+
+    def prefetch(self, key) -> None:
+        """Stage ``key``'s transfer into the window (async; returns
+        immediately).  No-op when disabled or already in flight."""
+        if not self.enabled or key in self.inflight:
+            return
+        while len(self._order) >= self.depth:
+            oldest = self._order.pop(0)
+            self.inflight.pop(oldest, None)
+        value, nbytes = self._fetch(key)
+        self.inflight[key] = value
+        self._order.append(key)
+        self.htod_bytes += nbytes
+        self.issued += 1
+
+    def acquire(self, key):
+        """Consume ``key``'s in-flight transfer (or fetch on demand),
+        blocking until the copy lands; the stall is accounted in
+        ``wait_s``."""
+        if key in self.inflight:
+            value = self.inflight.pop(key)
+            self._order.remove(key)
+        else:
+            value, nbytes = self._fetch(key)
+            self.htod_bytes += nbytes
+            self.demand += 1
+        t0 = time.perf_counter()
+        jax.block_until_ready(value)
+        self.wait_s += time.perf_counter() - t0
+        return value
+
+    def take_counters(self) -> Tuple[int, float]:
+        """Drain (htod_bytes, wait_s) since the last call."""
+        out = (self.htod_bytes, self.wait_s)
+        self.htod_bytes = 0
+        self.wait_s = 0.0
+        return out
+
+
 class ParamStore:
     """Weight-residency subsystem the engine executes through.
 
@@ -115,15 +179,12 @@ class ParamStore:
                     host["ffn"] = _to_host(ffnp)
             self._resident.append(res)
             self._host.append(host)
-        # in-flight prefetched transfers: (layer, module) -> device tree.
-        # Bounded at prefetch_depth layers — the double-buffer window.
-        self._inflight: Dict[int, Dict[str, Dict]] = {}
-        self._inflight_order: List[int] = []
-        # accounting (folded into EngineStats by engine.sync_stats)
-        self.htod_bytes = 0
-        self.prefetch_wait_s = 0.0
-        self.prefetch_issued = 0
-        self.demand_fetches = 0
+        # the double-buffer window: in-flight prefetched layer transfers,
+        # bounded at prefetch_depth (shared machinery with KV-page
+        # streaming — see StreamWindow)
+        self._window = StreamWindow(
+            self._fetch, depth=self.prefetch_depth, enabled=True
+        )
 
     @classmethod
     def build(
@@ -181,14 +242,34 @@ class ParamStore:
         )
 
     # -- streaming -------------------------------------------------------
-    def _fetch(self, li: int) -> Dict[str, Dict]:
+    # window-facing views kept for callers/tests that inspect the store
+    @property
+    def _inflight(self) -> Dict[int, Dict[str, Dict]]:
+        return self._window.inflight
+
+    @property
+    def htod_bytes(self) -> int:
+        return self._window.htod_bytes
+
+    @property
+    def prefetch_wait_s(self) -> float:
+        return self._window.wait_s
+
+    @property
+    def prefetch_issued(self) -> int:
+        return self._window.issued
+
+    @property
+    def demand_fetches(self) -> int:
+        return self._window.demand
+
+    def _fetch(self, li: int) -> Tuple[Dict[str, Dict], int]:
         """Issue the async htod copy of layer ``li``'s streamed modules."""
         fetched = {
             name: jax.device_put(tree) for name, tree in self._host[li].items()
         }
-        for tree in fetched.values():
-            self.htod_bytes += _tree_bytes(tree)
-        return fetched
+        nbytes = sum(_tree_bytes(tree) for tree in fetched.values())
+        return fetched, nbytes
 
     def prefetch(self, li: int) -> None:
         """Stage layer ``li``'s streamed modules into the in-flight window
@@ -198,14 +279,9 @@ class ParamStore:
         if not self.prefetch_enabled:
             return
         li = li % len(self.schema)
-        if not self._host[li] or li in self._inflight:
+        if not self._host[li]:
             return
-        while len(self._inflight_order) >= self.prefetch_depth:
-            oldest = self._inflight_order.pop(0)
-            self._inflight.pop(oldest, None)
-        self._inflight[li] = self._fetch(li)
-        self._inflight_order.append(li)
-        self.prefetch_issued += 1
+        self._window.prefetch(li)
 
     def acquire(self, li: int) -> Dict:
         """Return layer ``li``'s full param dict with streamed modules on
@@ -216,22 +292,10 @@ class ParamStore:
         for tree in self._resident[li].values():
             merged.update(tree)
         if self._host[li]:
-            if li in self._inflight:
-                fetched = self._inflight.pop(li)
-                self._inflight_order.remove(li)
-            else:
-                fetched = self._fetch(li)
-                self.demand_fetches += 1
-            t0 = time.perf_counter()
-            jax.block_until_ready(fetched)
-            self.prefetch_wait_s += time.perf_counter() - t0
-            for tree in fetched.values():
+            for tree in self._window.acquire(li).values():
                 merged.update(tree)
         return merged
 
     def take_counters(self) -> Tuple[int, float]:
         """Drain (htod_bytes, prefetch_wait_s) since the last call."""
-        out = (self.htod_bytes, self.prefetch_wait_s)
-        self.htod_bytes = 0
-        self.prefetch_wait_s = 0.0
-        return out
+        return self._window.take_counters()
