@@ -1,0 +1,365 @@
+"""AST lint encoding the ROADMAP standing contracts as rules.
+
+Stdlib-only (``ast`` + ``argparse``) — runs as a blocking CI job:
+
+    python -m repro.analysis.lint src/repro
+
+Rules (full rationale in ``analysis/README.md``; the ROADMAP standing
+contracts carry a contract -> rule-ID table):
+
+    MG101  host sync inside a ``@hot_path`` function: ``np.asarray`` /
+           ``np.array`` / ``jax.device_get`` / ``float(...)`` /
+           ``.item()`` / ``.tolist()`` / ``.block_until_ready()``.
+           Every one is a device round-trip the decode tick must not pay
+           implicitly; planned syncs carry an allowlist justification.
+    MG102  ``jax.jit`` construction inside a ``for``/``while`` loop — a
+           fresh jit object per iteration compiles per tick.
+    MG103  mutation of a frozen config dataclass instance (assignment to
+           an attribute of ``cfg``/``plan``/``serve``/... names, or
+           ``object.__setattr__`` outside ``__init__``/``__post_init__``).
+    MG104  a module-level jitted function calls
+           ``lax.dynamic_update_slice(_in_dim)`` — the in-place cache
+           write — without ``donate_argnames``/``donate_argnums``: the
+           "update" silently materializes a full functional copy.
+    MG105  ``jax.device_put`` outside the planned StreamWindow modules
+           (``serving/weights.py``, ``serving/cache.py``) — all htod
+           weight/KV traffic flows through the accounted window.
+    MG106  an allowlist comment without a justification: every
+           suppression must say WHY the line is exempt.
+
+Allowlist syntax — on the FIRST line of the flagged statement:
+
+    x = np.asarray(dev)   # lint: allow[MG101] planned once-per-chunk readback
+
+Multiple rules: ``allow[MG101,MG105]``.  The free text after the bracket
+is the justification and must be non-empty (else MG106).
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import re
+import sys
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+RULES: Dict[str, str] = {
+    "MG101": "host sync / device readback inside a @hot_path function",
+    "MG102": "jax.jit construction inside a loop retraces per iteration",
+    "MG103": "mutation of a frozen config dataclass instance",
+    "MG104": "jitted dynamic_update_slice writer without donate_argnames",
+    "MG105": "jax.device_put outside the planned StreamWindow modules",
+    "MG106": "lint allowlist entry without a justification",
+}
+
+HOT_PATH_NAMES = {"hot_path"}
+HOST_SYNC_METHODS = {"item", "tolist", "block_until_ready"}
+HOST_SYNC_NP_FUNCS = {"asarray", "array"}
+# modules whose jax.device_put IS the planned transfer window
+DEVICE_PUT_OK = ("serving/weights.py", "serving/cache.py")
+# names conventionally bound to frozen config dataclasses
+# (ModelConfig / Plan / ServeConfig / StreamConfig / CacheConfig /
+#  SamplingParams / HardwareProfile)
+CONFIG_NAMES = {"cfg", "config", "plan", "serve", "serve_cfg", "stream",
+                "stream_cfg", "cache_config", "cc", "sampling_params", "sp",
+                "hw"}
+MUTATING_SETATTR_OK_SCOPES = {"__init__", "__post_init__", "__new__"}
+
+_ALLOW_RE = re.compile(
+    r"#\s*lint:\s*allow\[([A-Za-z0-9_,\s]+)\]\s*(.*?)\s*$"
+)
+
+
+@dataclass
+class Finding:
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+def _parse_allowlist(text: str):
+    """line -> (set of allowed rule IDs, justification)."""
+    allow: Dict[int, Tuple[Set[str], str]] = {}
+    for i, line in enumerate(text.splitlines(), start=1):
+        m = _ALLOW_RE.search(line)
+        if m:
+            rules = {r.strip().upper() for r in m.group(1).split(",")
+                     if r.strip()}
+            allow[i] = (rules, m.group(2).strip())
+    return allow
+
+
+def _dotted(node: ast.AST) -> str:
+    """'jax.jit' for Attribute(Name('jax'), 'jit'); '' when unresolvable."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _decorator_names(fn: ast.AST) -> List[str]:
+    names = []
+    for dec in fn.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        names.append(_dotted(target))
+    return names
+
+
+def _is_hot_path(fn: ast.AST) -> bool:
+    return any(name.split(".")[-1] in HOT_PATH_NAMES
+               for name in _decorator_names(fn))
+
+
+def _contains(node: ast.AST, dotted: str) -> Optional[ast.AST]:
+    """First descendant whose dotted name is ``dotted`` (e.g. 'jax.jit')."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute) and _dotted(sub) == dotted:
+            return sub
+    return None
+
+
+def _jit_decoration(fn: ast.FunctionDef):
+    """(is_jitted, donates) from the decorator list: matches ``@jax.jit``,
+    ``@functools.partial(jax.jit, ...)`` and ``@jax.jit(...)`` forms."""
+    jitted = donates = False
+    for dec in fn.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        name = _dotted(target)
+        is_partial = name.endswith("partial") and isinstance(dec, ast.Call)
+        if name == "jax.jit" or (
+            is_partial and dec.args
+            and _dotted(dec.args[0]) == "jax.jit"
+        ):
+            jitted = True
+            if isinstance(dec, ast.Call):
+                for kw in dec.keywords:
+                    if kw.arg in ("donate_argnames", "donate_argnums"):
+                        donates = True
+    return jitted, donates
+
+
+class _Checker(ast.NodeVisitor):
+    def __init__(self, path: str, relpath: str) -> None:
+        self.path = path
+        self.relpath = relpath.replace("\\", "/")
+        self.findings: List[Finding] = []
+        self._hot_depth = 0
+        self._scope: List[str] = []
+
+    def _flag(self, node: ast.AST, rule: str, message: str) -> None:
+        self.findings.append(
+            Finding(self.path, getattr(node, "lineno", 0), rule, message)
+        )
+
+    # -- function scope tracking ---------------------------------------
+    def _visit_function(self, node) -> None:
+        hot = _is_hot_path(node)
+        self._check_mg104(node)
+        self._hot_depth += 1 if hot else 0
+        self._scope.append(node.name)
+        self.generic_visit(node)
+        self._scope.pop()
+        self._hot_depth -= 1 if hot else 0
+
+    visit_FunctionDef = _visit_function
+    visit_AsyncFunctionDef = _visit_function
+
+    # -- MG104: jitted dus writer must donate --------------------------
+    def _check_mg104(self, fn) -> None:
+        jitted, donates = _jit_decoration(fn)
+        if not jitted or donates:
+            return
+        for sub in ast.walk(fn):
+            if isinstance(sub, ast.Attribute) and sub.attr in (
+                "dynamic_update_slice", "dynamic_update_slice_in_dim"
+            ):
+                self._flag(
+                    sub, "MG104",
+                    f"jitted '{fn.name}' writes via {sub.attr} without "
+                    "donate_argnames — the in-place update silently "
+                    "becomes a whole-buffer copy",
+                )
+                return
+
+    # -- MG101 / MG105: calls -----------------------------------------
+    def visit_Call(self, node: ast.Call) -> None:
+        name = _dotted(node.func)
+        if name == "jax.device_put" and not self.relpath.endswith(
+            DEVICE_PUT_OK
+        ):
+            self._flag(
+                node, "MG105",
+                "jax.device_put outside serving/weights.py / "
+                "serving/cache.py — htod traffic must flow through the "
+                "planned StreamWindow",
+            )
+        if self._hot_depth > 0:
+            leaf = name.split(".")[-1]
+            if name in ("np.asarray", "np.array", "numpy.asarray",
+                        "numpy.array", "jax.device_get"):
+                self._flag(node, "MG101",
+                           f"{name} inside a @hot_path function is a "
+                           "device->host sync per call")
+            elif isinstance(node.func, ast.Attribute) and (
+                leaf in HOST_SYNC_METHODS
+            ):
+                self._flag(node, "MG101",
+                           f".{leaf}() inside a @hot_path function is a "
+                           "blocking host sync")
+            elif (isinstance(node.func, ast.Name)
+                  and node.func.id == "float" and node.args
+                  and not isinstance(node.args[0], ast.Constant)):
+                self._flag(node, "MG101",
+                           "float(...) on a device value inside a "
+                           "@hot_path function forces a blocking readback")
+        # MG103: object.__setattr__ outside construction scopes
+        if (name == "object.__setattr__"
+                and not (self._scope
+                         and self._scope[-1] in MUTATING_SETATTR_OK_SCOPES)):
+            self._flag(node, "MG103",
+                       "object.__setattr__ mutates a frozen dataclass "
+                       "outside __init__/__post_init__")
+        self.generic_visit(node)
+
+    # -- MG102: jit construction in loops ------------------------------
+    def _visit_loop(self, node) -> None:
+        for stmt in node.body + getattr(node, "orelse", []):
+            hit = _contains(stmt, "jax.jit")
+            if hit is not None:
+                self._flag(hit, "MG102",
+                           "jax.jit constructed inside a loop — a fresh "
+                           "jit object per iteration compiles per tick")
+        self.generic_visit(node)
+
+    visit_For = _visit_loop
+    visit_While = _visit_loop
+
+    # -- MG103: frozen-config attribute assignment ---------------------
+    def _config_target(self, target: ast.AST) -> Optional[str]:
+        """cfg.x = ... / self.cfg.x = ... — an attribute being SET on an
+        object bound to a config name (NOT ``self.cfg = cfg``, which
+        binds the attribute on self)."""
+        if not isinstance(target, ast.Attribute):
+            return None
+        base = target.value
+        if isinstance(base, ast.Name) and base.id in CONFIG_NAMES:
+            return base.id
+        if isinstance(base, ast.Attribute) and base.attr in CONFIG_NAMES:
+            return base.attr
+        return None
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        for target in node.targets:
+            name = self._config_target(target)
+            if name:
+                self._flag(node, "MG103",
+                           f"assignment into '{name}.{target.attr}' — "
+                           "config dataclasses are frozen; use "
+                           "dataclasses.replace")
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        name = self._config_target(node.target)
+        if name:
+            self._flag(node, "MG103",
+                       f"augmented assignment into '{name}."
+                       f"{node.target.attr}' — config dataclasses are "
+                       "frozen")
+        self.generic_visit(node)
+
+
+def check_source(text: str, path: str = "<memory>",
+                 relpath: Optional[str] = None) -> List[Finding]:
+    """Lint one source text; returns unsuppressed findings (allowlisted
+    lines are dropped, undocumented allowlist entries become MG106)."""
+    tree = ast.parse(text, filename=path)
+    checker = _Checker(path, relpath if relpath is not None else path)
+    checker.visit(tree)
+    allow = _parse_allowlist(text)
+    findings = []
+    used: Set[int] = set()
+    seen: Set[Tuple[int, str]] = set()
+    deduped = []
+    for f in checker.findings:
+        if (f.line, f.rule) not in seen:
+            seen.add((f.line, f.rule))
+            deduped.append(f)
+    for f in deduped:
+        entry = allow.get(f.line)
+        if entry is not None and f.rule in entry[0]:
+            used.add(f.line)
+            if not entry[1]:
+                findings.append(Finding(
+                    path, f.line, "MG106",
+                    f"allowlist entry for {f.rule} has no justification",
+                ))
+            continue
+        findings.append(f)
+    # allowlist comments must justify even when nothing fired (a stale
+    # suppression with no reason is still undocumented)
+    for line, (rules, reason) in allow.items():
+        if line not in used and not reason:
+            findings.append(Finding(
+                path, line, "MG106",
+                f"allowlist entry for {','.join(sorted(rules))} has no "
+                "justification",
+            ))
+    return findings
+
+
+def _iter_py_files(paths: Sequence[str]) -> Iterable[Path]:
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            yield from sorted(path.rglob("*.py"))
+        elif path.suffix == ".py":
+            yield path
+
+
+def _relpath(path: Path) -> str:
+    """Path relative to its 'repro' package root (rule MG105 matches on
+    package-relative module paths)."""
+    parts = path.as_posix().split("/")
+    if "repro" in parts:
+        idx = len(parts) - 1 - parts[::-1].index("repro")
+        return "/".join(parts[idx + 1:])
+    return path.as_posix()
+
+
+def lint_paths(paths: Sequence[str]) -> List[Finding]:
+    findings: List[Finding] = []
+    for path in _iter_py_files(paths):
+        text = path.read_text()
+        findings.extend(
+            check_source(text, path=str(path), relpath=_relpath(path))
+        )
+    return findings
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="Standing-contract AST lint (rules MG101-MG106).",
+    )
+    ap.add_argument("paths", nargs="+", help="files or directories to lint")
+    args = ap.parse_args(argv)
+    findings = lint_paths(args.paths)
+    for f in findings:
+        print(f.render())
+    if findings:
+        print(f"{len(findings)} finding(s)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

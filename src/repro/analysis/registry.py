@@ -1,0 +1,154 @@
+"""Retrace registry: every jitted hot-path callable registers under a name.
+
+Two layers, generalizing the repo's two ad-hoc retrace counters
+(``EngineStats.decode_retraces`` and ``kvcache.evict_retraces``):
+
+* ``register_jit(name, donated=...)`` — decorator applied to each jitted
+  module launch.  The registry records the jit object so the sanitizer can
+  read its **compile count** (``_cache_size()``, the number of distinct
+  traces XLA holds) and diff it across a steady-state region: any growth
+  is a silent per-tick retrace.  Functions registered with ``donated=``
+  argument names additionally get a thin wrapper that lets the active
+  sanitizer verify donation aliasing on their first launch
+  (``repro.analysis.donation``).
+
+* ``TraceKeySet(name)`` — a named set of Python-side trace keys, the
+  abstraction both legacy counters are now instances of: the engine adds
+  one ``(n, n_host, T, ...)`` key per fused-chunk shape, the kv cache one
+  padded eviction width per distinct width.  Key-set growth approximates
+  retraces from the dispatcher's side (cheap, per-engine); compile counts
+  are the XLA-side ground truth the sanitizer's steady-state check uses.
+"""
+from __future__ import annotations
+
+import functools
+import weakref
+from typing import Any, Callable, Dict, Iterable, Optional, Tuple
+
+
+class JitEntry:
+    """One registered jitted callable."""
+
+    def __init__(self, name: str, fn: Callable, donated: Tuple[str, ...]):
+        self.name = name
+        self.fn = fn                      # the jit object (has _cache_size)
+        self.donated = tuple(donated)
+
+    def compile_count(self) -> int:
+        """Number of distinct traces XLA's jit cache holds for this
+        function (-1 when the backend doesn't expose it)."""
+        size = getattr(self.fn, "_cache_size", None)
+        try:
+            return int(size()) if callable(size) else -1
+        except Exception:
+            return -1
+
+
+_JITS: Dict[str, JitEntry] = {}
+
+
+def register_jit(name: str, donated: Iterable[str] = ()) -> Callable:
+    """Register a jitted callable under ``name``.
+
+    Returns the function unchanged when it donates nothing; otherwise
+    wraps it so the active sanitizer (``runtime.current()``) can run the
+    donation/aliasing check against the first real launch's arguments.
+    """
+    donated = tuple(donated)
+
+    def deco(fn: Callable) -> Callable:
+        entry = JitEntry(name, fn, donated)
+        _JITS[name] = entry
+        if not donated:
+            return fn
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            from repro.analysis import runtime
+
+            runtime.on_donating_launch(entry, args, kwargs)
+            return fn(*args, **kwargs)
+
+        wrapper.__registry_entry__ = entry
+        return wrapper
+
+    return deco
+
+
+def registered() -> Dict[str, JitEntry]:
+    return dict(_JITS)
+
+
+def get(name: str) -> Optional[JitEntry]:
+    return _JITS.get(name)
+
+
+def compile_counts() -> Dict[str, int]:
+    """Current per-name compile counts for every registered jit."""
+    return {name: e.compile_count() for name, e in _JITS.items()}
+
+
+def snapshot() -> Dict[str, int]:
+    """Alias of ``compile_counts`` — the value to diff with ``growth``."""
+    return compile_counts()
+
+
+def growth(since: Dict[str, int]) -> Dict[str, int]:
+    """Positive compile-count deltas since ``since`` (a ``snapshot()``).
+
+    A non-empty result during a steady-state decode region means some
+    registered hot-path function retraced — the exact failure the fused
+    chunk's one-launch contract forbids."""
+    out: Dict[str, int] = {}
+    for name, count in compile_counts().items():
+        if count < 0:
+            continue
+        delta = count - since.get(name, 0)
+        if delta > 0:
+            out[name] = delta
+    return out
+
+
+# ---------------------------------------------------------------------------
+# TraceKeySet — the generalized ad-hoc counter
+# ---------------------------------------------------------------------------
+_KEYSETS: "weakref.WeakSet[TraceKeySet]" = weakref.WeakSet()
+
+
+class TraceKeySet:
+    """A named set of trace keys (shapes/widths/static-arg tuples) seen by
+    one dispatcher.  ``add`` returns True exactly when the key is new —
+    the caller's retrace accounting hangs off that (e.g. the engine bumps
+    ``stats.decode_retraces``).  Instances register themselves so
+    ``keyset_counts`` can fold them into the sanitizer report."""
+
+    def __init__(self, name: str) -> None:
+        self.name = name
+        self._keys: set = set()
+        _KEYSETS.add(self)
+
+    def add(self, key: Any) -> bool:
+        if key in self._keys:
+            return False
+        self._keys.add(key)
+        return True
+
+    def __contains__(self, key: Any) -> bool:
+        return key in self._keys
+
+    def __len__(self) -> int:
+        return len(self._keys)
+
+    @property
+    def count(self) -> int:
+        return len(self._keys)
+
+
+def keyset_counts() -> Dict[str, int]:
+    """Total distinct keys per key-set name, summed over live instances
+    (several engines may each hold a set under the same name).
+    Informational — the steady-state check uses ``compile_counts``."""
+    out: Dict[str, int] = {}
+    for ks in list(_KEYSETS):
+        out[ks.name] = out.get(ks.name, 0) + ks.count
+    return out

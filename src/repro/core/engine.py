@@ -84,6 +84,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.analysis import runtime as sanitizer
+from repro.analysis.markers import hot_path
+from repro.analysis.registry import TraceKeySet, register_jit
 from repro.configs.base import ModelConfig
 from repro.core.dag_builder import Plan
 from repro.core.host_attention import host_decode_attention
@@ -127,6 +130,7 @@ def _counted(fn):
 # Jitted module launches (the per-module path)
 # ---------------------------------------------------------------------------
 @_counted
+@register_jit("engine.attn_decode", donated=("k", "v"))
 @functools.partial(jax.jit, static_argnames=("cfg", "lo"),
                    donate_argnames=("k", "v"))
 def _attn_decode_module(cfg, lo, p, x_mb, k, v, pos):
@@ -148,6 +152,7 @@ def _attn_decode_module(cfg, lo, p, x_mb, k, v, pos):
 
 
 @_counted
+@register_jit("engine.attn_decode_host", donated=("k", "v"))
 @functools.partial(jax.jit, static_argnames=("cfg", "lo"),
                    donate_argnames=("k", "v"))
 def _attn_decode_host_module(cfg, lo, p, x_mb, k, v, pos):
@@ -182,6 +187,7 @@ def _attn_decode_host_module(cfg, lo, p, x_mb, k, v, pos):
 
 
 @_counted
+@register_jit("engine.ssm_decode", donated=("h", "conv"))
 @functools.partial(jax.jit, static_argnames=("cfg", "lo"),
                    donate_argnames=("h", "conv"))
 def _ssm_decode_module(cfg, lo, p, x, h, conv):
@@ -198,12 +204,14 @@ def _ssm_decode_module(cfg, lo, p, x, h, conv):
 
 
 @_counted
+@register_jit("engine.router")
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def _router_module(cfg, router_w, h):
     return moe_mod.route(cfg, router_w, h)
 
 
 @_counted
+@register_jit("engine.expert")
 @jax.jit
 def _expert_module(wg, wu, wd, h_chunk):
     """One expert over a chunk of tokens (the 'loop' oracle path's unit)."""
@@ -229,13 +237,16 @@ def _grouped_expert_math(cfg, p, x, capacity):
 
 
 _grouped_expert_module = _counted(
-    functools.partial(jax.jit, static_argnames=("cfg", "capacity"))(
-        _grouped_expert_math
+    register_jit("engine.grouped_expert")(
+        functools.partial(jax.jit, static_argnames=("cfg", "capacity"))(
+            _grouped_expert_math
+        )
     )
 )
 
 
 @_counted
+@register_jit("engine.ffn")
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def _ffn_module(cfg, p, x):
     h = rms_norm(x, p["norm2"], cfg.norm_eps)
@@ -243,6 +254,7 @@ def _ffn_module(cfg, p, x):
 
 
 @_counted
+@register_jit("engine.norm2")
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def _norm2_module(cfg, p, x):
     return rms_norm(x, p["norm2"], cfg.norm_eps)
@@ -255,17 +267,21 @@ def _head_math(cfg, tie, params, x):
 
 
 _head_module = _counted(
-    functools.partial(jax.jit, static_argnames=("cfg", "tie"))(_head_math)
+    register_jit("engine.head")(
+        functools.partial(jax.jit, static_argnames=("cfg", "tie"))(_head_math)
+    )
 )
 
 
 @_counted
+@register_jit("engine.embed")
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def _embed_module(cfg, embed, tokens):
     return jnp.take(embed, tokens, axis=0)
 
 
 @_counted
+@register_jit("engine.prefill_layer")
 @functools.partial(jax.jit, static_argnames=("cfg", "kind", "ffn", "sctx"))
 def _prefill_layer_module(cfg, kind, ffn, sctx, p, x, positions, lengths):
     """One full layer (mixer + FFN stage) over a prefill micro-batch.
@@ -282,6 +298,7 @@ def _prefill_layer_module(cfg, kind, ffn, sctx, p, x, positions, lengths):
 # Paged decode modules (Mode B: KV host tier — serving.cache.KVPageTable)
 # ---------------------------------------------------------------------------
 @_counted
+@register_jit("engine.paged_attn_decode", donated=("pk", "pv"))
 @functools.partial(jax.jit, static_argnames=("cfg", "span"),
                    donate_argnames=("pk", "pv"))
 def _paged_attn_decode_module(cfg, span, p, x_mb, pk, pv, ek, ev, frames,
@@ -336,6 +353,7 @@ def _paged_attn_decode_module(cfg, span, p, x_mb, pk, pv, ek, ev, frames,
 
 
 @_counted
+@register_jit("engine.paged_attn_host")
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def _paged_attn_host_module(cfg, p, x_mb, gk, gv, pos):
     """Host-path attention over GATHERED page rows: identical math to
@@ -368,6 +386,7 @@ def _paged_attn_host_module(cfg, p, x_mb, gk, gv, pos):
 
 
 @_counted
+@register_jit("engine.paged_slot_write", donated=("pk", "pv"))
 @functools.partial(jax.jit, donate_argnames=("pk", "pv"))
 def _paged_slot_write_module(pk, pv, frames, offs, kvals, vvals):
     """Single-slot pool writes for host-path rows whose written page
@@ -378,6 +397,7 @@ def _paged_slot_write_module(pk, pv, frames, offs, kvals, vvals):
 
 
 @_counted
+@register_jit("engine.suffix_layer")
 @functools.partial(jax.jit, static_argnames=("cfg", "ffn", "sctx"))
 def _suffix_layer_module(cfg, ffn, sctx, p, x, pk, pv, pos0):
     """One layer of SUFFIX prefill against a cached prefix (prefix-cache
@@ -413,6 +433,7 @@ def _suffix_layer_module(cfg, ffn, sctx, p, x, pk, pv, pos0):
 # The fused decode macro-step (ONE launch per T-token chunk)
 # ---------------------------------------------------------------------------
 @_counted
+@register_jit("engine.fused_decode_chunk", donated=("cache",))
 @functools.partial(
     jax.jit,
     static_argnames=("cfg", "schema", "tie", "capacity", "lo", "pos_cap",
@@ -627,9 +648,11 @@ class ModuleBatchingEngine:
         self._batch = 0
         # fused-path bookkeeping: per-layer param tuple (aliases the
         # resident arrays) and the set of (B, path, chunk) trace keys seen
-        # (a new key = one XLA retrace, surfaced as stats.decode_retraces)
+        # (a new key = one XLA retrace, surfaced as stats.decode_retraces;
+        # the TraceKeySet registers with repro.analysis so the sanitizer
+        # report folds it in next to the XLA compile counts)
         self._fused_params: Optional[Tuple[Dict, ...]] = None
-        self._fused_keys: set = set()
+        self._fused_keys = TraceKeySet("engine.fused_decode_chunk")
 
     def _expert_capacity(self, batch: int) -> int:
         """Per-expert capacity C: the plan's b_e, clamped to the most tokens
@@ -711,9 +734,37 @@ class ModuleBatchingEngine:
         from repro.serving.kvcache import evict_rows
 
         assert self.cache is not None
+        stale = self._stale_snapshot()
         self.cache = evict_rows(self.cache, rows)
         if self.pages is not None:
             self.pages.free_rows([int(r) for r in np.asarray(rows).reshape(-1)])
+        self._poison_stale(stale)
+
+    # -- sanitizer hooks -------------------------------------------------
+    def _stale_snapshot(self) -> Optional[List]:
+        """Pre-launch array leaves of every buffer the decode tick may
+        donate (cache pytree + page pools) — captured only in poison mode
+        so ``_poison_stale`` can invalidate whatever XLA didn't consume."""
+        san = sanitizer.current()
+        if san is None or not san.poison or self.cache is None:
+            return None
+        trees = [self.cache]
+        if self.pages is not None:
+            trees.extend([self.pages.pool_k, self.pages.pool_v])
+        return jax.tree.leaves(trees)
+
+    def _poison_stale(self, stale: Optional[List]) -> None:
+        """Debug-mode stale-buffer poisoner (ROADMAP cache-donation
+        contract): delete pre-launch buffers that are neither part of the
+        rebound cache/pools nor already consumed by donation, so retained
+        references into ``engine.cache``/``pool_k``/``pool_v`` across a
+        tick fail loudly instead of reading garbage."""
+        if stale is None:
+            return
+        trees = [self.cache]
+        if self.pages is not None:
+            trees.extend([self.pages.pool_k, self.pages.pool_v])
+        sanitizer.poison_stale(stale, trees)
 
     # -- phases ---------------------------------------------------------
     def _prefill_sctx(self, mb_tokens: int) -> ShardCtx:
@@ -878,20 +929,36 @@ class ModuleBatchingEngine:
         path lives in ``decode_chunk``; this method is the per-module
         oracle and the streamed/loop execution path.)
         """
-        pos = jnp.asarray(pos, jnp.int32)
-        return self._decode_rows(jnp.asarray(tokens), pos, 0)
+        stale = self._stale_snapshot()
+        with sanitizer.allowed("decode-inputs"):
+            pos = jnp.asarray(pos, jnp.int32)
+            tokens = jnp.asarray(tokens)
+        with sanitizer.decode_region():
+            logits = self._decode_rows(tokens, pos, 0)
+        self._poison_stale(stale)
+        return logits
 
-    def _decode_rows(self, tokens, pos, row0: int) -> jax.Array:
+    @hot_path
+    def _decode_rows(self, tokens, pos, row0: int, pos_host=None) -> jax.Array:
         """Per-module decode over batch rows ``[row0, row0+n)`` — ``tokens``
         and ``pos`` are the rows' own (n,)/scalar arrays.  The full-batch
         ``decode_step`` is ``row0=0``; the fused path calls it with the ω
-        host segment so host-path rows decode outside the fused launch."""
+        host segment so host-path rows decode outside the fused launch.
+
+        ``pos_host`` is the rows' positions as a host (numpy) mirror —
+        Mode B paging does host-side position math for its page-table
+        bookkeeping, and threading the mirror from the caller keeps that
+        at ONE planned readback per tick instead of one per layer."""
         cfg = self.cfg
+        if (pos_host is None and self.pages is not None
+                and not self.pages.fully_resident):
+            with sanitizer.allowed("decode-pos-host-mirror"):
+                pos_host = np.asarray(pos, np.int32)  # lint: allow[MG101] planned once-per-tick position readback for the page table
         x = _embed_module(cfg, self.store.base["embed"], tokens)
         for li, (kind, ffn) in enumerate(self.schema):
             p = self.store.acquire(li)
             if kind == "attn":
-                x = x + self._attention_stage(li, p, x, pos, row0)
+                x = x + self._attention_stage(li, p, x, pos, row0, pos_host)
             else:
                 y, h, conv = _ssm_decode_module(
                     cfg, row0, p, x, self.cache[li]["h"], self.cache[li]["conv"]
@@ -908,7 +975,8 @@ class ModuleBatchingEngine:
         return _head_module(cfg, cfg.tie_embeddings, self.store.base, x)
 
     # -- module stages ---------------------------------------------------
-    def _attention_stage(self, li, p, x, pos, row0: int = 0) -> jax.Array:
+    def _attention_stage(self, li, p, x, pos, row0: int = 0,
+                         pos_host=None) -> jax.Array:
         """Micro-batched attention with the ω host/device split.
 
         The first ``round(ω·B)`` sequences of the FULL batch take the host
@@ -921,7 +989,7 @@ class ModuleBatchingEngine:
         whole-cache functional copy is made.
         """
         if self.pages is not None and not self.pages.fully_resident:
-            return self._paged_attention_stage(li, p, x, pos, row0)
+            return self._paged_attention_stage(li, p, x, pos, row0, pos_host)
         cfg, plan = self.cfg, self.plan
         n = x.shape[0]
         B = self._batch or n
@@ -938,8 +1006,13 @@ class ModuleBatchingEngine:
                 _attn_decode_host_module if hi <= n_host
                 else _attn_decode_module
             )
-            mb_pos = pos if pos.ndim == 0 else pos[lo - row0:hi - row0]
-            y, k, v = fn(cfg, lo, p, x[lo - row0:hi - row0], k, v, mb_pos)
+            # eager basic slicing uploads its start indices as int32
+            # scalars (jax dispatches slice_p as dynamic_slice) — a
+            # planned, bounded per-micro-batch transfer
+            with sanitizer.allowed("decode-row-slice"):
+                mb_x = x[lo - row0:hi - row0]
+                mb_pos = pos if pos.ndim == 0 else pos[lo - row0:hi - row0]
+            y, k, v = fn(cfg, lo, p, mb_x, k, v, mb_pos)
             outs.append(y)
             self.stats.attn_microbatches += 1
             if hi <= n_host:
@@ -950,7 +1023,9 @@ class ModuleBatchingEngine:
         self.cache[li]["k"], self.cache[li]["v"] = k, v
         return jnp.concatenate(outs, axis=0)
 
-    def _paged_attention_stage(self, li, p, x, pos, row0: int = 0) -> jax.Array:
+    @hot_path
+    def _paged_attention_stage(self, li, p, x, pos, row0: int = 0,
+                               pos_host=None) -> jax.Array:
         """Mode B decode attention (host-tier pages present).
 
         The ω MATH-path split is unchanged from ``_attention_stage`` — rows
@@ -968,9 +1043,12 @@ class ModuleBatchingEngine:
         n = x.shape[0]
         B = self._batch or n
         n_host_rows = int(round(plan.omega * B))
-        pos_np = np.asarray(jnp.broadcast_to(
-            jnp.atleast_1d(jnp.asarray(pos, jnp.int32)), (n,)
-        ))
+        if pos_host is None:                # direct call; planned readback
+            with sanitizer.allowed("decode-pos-host-mirror"):
+                pos_host = np.asarray(pos, np.int32)  # lint: allow[MG101] planned once-per-tick position readback for the page table
+        pos_np = np.broadcast_to(
+            np.atleast_1d(np.asarray(pos_host, np.int32)), (n,)  # lint: allow[MG101] pos_host is already a numpy mirror; host-only dtype/shape normalization
+        )
         span, pt = pages.span, pages.page_tokens
         if cfg.sliding_window:
             wslot = pos_np % span
@@ -983,60 +1061,68 @@ class ModuleBatchingEngine:
         K, hd = cfg.num_kv_heads, cfg.head_dim
         outs = []
         if nh:
-            gk = np.zeros((nh, span, K, hd), pages._dtype)
-            gv = np.zeros_like(gk)
-            for i in range(nh):
-                gk[i], gv[i] = pages.read_row(li, int(rows_all[i]), span)
-            y_h, k_new_h, v_new_h = _paged_attn_host_module(
-                cfg, p, x[:nh], jnp.asarray(gk), jnp.asarray(gv),
-                jnp.asarray(pos_np[:nh]),
-            )
-            outs.append(y_h)
-            k_np, v_np = np.asarray(k_new_h), np.asarray(v_new_h)
-            dev_writes = []
-            for i in range(nh):
-                f = int(pages.page_map[int(rows_all[i]), int(wpage[i])])
-                if f >= pages.device_frames:
-                    pages.write_host_slot(
-                        li, f - pages.device_frames, int(woff[i]),
-                        k_np[i], v_np[i],
-                    )
-                elif f >= 0:            # ω row spilled onto a device frame
-                    dev_writes.append((f, int(woff[i]), i))
-            if dev_writes:
-                width = max(8, -(-len(dev_writes) // 8) * 8)
-                fr = np.full(width, pages.device_frames, np.int32)  # null pad
-                off = np.zeros(width, np.int32)
-                ksel = np.zeros((width, K, hd), k_np.dtype)
-                vsel = np.zeros_like(ksel)
-                for j, (f, o, i) in enumerate(dev_writes):
-                    fr[j], off[j] = f, o
-                    ksel[j], vsel[j] = k_np[i], v_np[i]
-                pages.pool_k[li], pages.pool_v[li] = _paged_slot_write_module(
-                    pages.pool_k[li], pages.pool_v[li],
-                    jnp.asarray(fr), jnp.asarray(off),
-                    jnp.asarray(ksel), jnp.asarray(vsel),
+            with sanitizer.allowed("paged-host-rows"):
+                gk = np.zeros((nh, span, K, hd), pages._dtype)
+                gv = np.zeros_like(gk)
+                for i in range(nh):
+                    gk[i], gv[i] = pages.read_row(li, int(rows_all[i]), span)
+                y_h, k_new_h, v_new_h = _paged_attn_host_module(
+                    cfg, p, x[:nh], jnp.asarray(gk), jnp.asarray(gv),
+                    jnp.asarray(pos_np[:nh]),
                 )
+                outs.append(y_h)
+                k_np, v_np = np.asarray(k_new_h), np.asarray(v_new_h)  # lint: allow[MG101] host rows own the written slot; planned readback
+                dev_writes = []
+                for i in range(nh):
+                    f = int(pages.page_map[int(rows_all[i]), int(wpage[i])])
+                    if f >= pages.device_frames:
+                        pages.write_host_slot(
+                            li, f - pages.device_frames, int(woff[i]),
+                            k_np[i], v_np[i],
+                        )
+                    elif f >= 0:        # ω row spilled onto a device frame
+                        dev_writes.append((f, int(woff[i]), i))
+                if dev_writes:
+                    width = max(8, -(-len(dev_writes) // 8) * 8)
+                    fr = np.full(width, pages.device_frames, np.int32)  # null
+                    off = np.zeros(width, np.int32)
+                    ksel = np.zeros((width, K, hd), k_np.dtype)
+                    vsel = np.zeros_like(ksel)
+                    for j, (f, o, i) in enumerate(dev_writes):
+                        fr[j], off[j] = f, o
+                        ksel[j], vsel[j] = k_np[i], v_np[i]
+                    pk, pv = _paged_slot_write_module(
+                        pages.pool_k[li], pages.pool_v[li],
+                        jnp.asarray(fr), jnp.asarray(off),
+                        jnp.asarray(ksel), jnp.asarray(vsel),
+                    )
+                    pages.pool_k[li], pages.pool_v[li] = pk, pv
             self.stats.attn_microbatches += 1
             self.stats.host_attn_tokens += nh
         nd = n - nh
         if nd:
             didx = [int(r) for r in rows_all[nh:]]
-            frames = jnp.asarray(pages.gather_indices(didx))
             wframe, host_writes = pages.write_targets(didx, wpage[nh:])
+            with sanitizer.allowed("paged-index-upload"):
+                frames = jnp.asarray(pages.gather_indices(didx))
+                posd = jnp.asarray(pos_np[nh:])
+                wpaged = jnp.asarray(wpage[nh:])
+                wframed = jnp.asarray(wframe)
+            with sanitizer.allowed("decode-row-slice"):
+                xd = x[nh:]
             ek, ev = pages.acquire(li)
             y_d, pk, pv, k_new, v_new = _paged_attn_decode_module(
-                cfg, span, p, x[nh:], pages.pool_k[li], pages.pool_v[li],
-                ek, ev, frames, jnp.asarray(pos_np[nh:]),
-                jnp.asarray(wpage[nh:]), jnp.asarray(wframe),
+                cfg, span, p, xd, pages.pool_k[li], pages.pool_v[li],
+                ek, ev, frames, posd, wpaged, wframed,
             )
             pages.pool_k[li], pages.pool_v[li] = pk, pv
             if host_writes:             # device row's written page is host-side
-                k_np, v_np = np.asarray(k_new), np.asarray(v_new)
-                for i, hf in host_writes:
-                    pages.write_host_slot(
-                        li, hf, int(woff[nh + i]), k_np[i], v_np[i]
-                    )
+                with sanitizer.allowed("paged-host-writeback"):
+                    k_np, v_np = np.asarray(k_new), np.asarray(v_new)  # lint: allow[MG101] written page lives on the host tier; planned readback
+                    for i, hf in host_writes:
+                        pages.write_host_slot(
+                            li, hf, int(woff[nh + i]), k_np[i], v_np[i]
+                        )
             outs.append(y_d)
             self.stats.attn_microbatches += 1
             self.stats.device_attn_tokens += nd
@@ -1068,27 +1154,30 @@ class ModuleBatchingEngine:
         moe = p["moe"]
         h = _norm2_module(cfg, p, x)
         gates, idx, _ = _router_module(cfg, moe["router"], h)
-        idx_np = np.asarray(idx)                     # host-side scheduling
-        gates_np = np.asarray(gates)
-        y = jnp.zeros_like(x)
-        b_e = max(1, plan.b_e)
-        for e in range(cfg.num_experts):
-            rows, which = np.nonzero(idx_np == e)
-            if rows.size == 0:
-                continue
-            w = gates_np[rows, which]
-            for lo in range(0, rows.size, b_e):
-                r = rows[lo : lo + b_e]
-                g = w[lo : lo + b_e]
-                ye = _expert_module(
-                    moe["experts_w_gate"][e],
-                    moe["experts_w_up"][e],
-                    moe["experts_w_down"][e],
-                    h[r],
-                )
-                y = y.at[r].add(ye * jnp.asarray(g)[:, None].astype(ye.dtype))
-                self.stats.expert_launches += 1
-                self.stats.expert_tokens += int(r.size)
+        with sanitizer.allowed("expert-loop-oracle"):
+            idx_np = np.asarray(idx)                 # host-side scheduling
+            gates_np = np.asarray(gates)
+            y = jnp.zeros_like(x)
+            b_e = max(1, plan.b_e)
+            for e in range(cfg.num_experts):
+                rows, which = np.nonzero(idx_np == e)
+                if rows.size == 0:
+                    continue
+                w = gates_np[rows, which]
+                for lo in range(0, rows.size, b_e):
+                    r = rows[lo : lo + b_e]
+                    g = w[lo : lo + b_e]
+                    ye = _expert_module(
+                        moe["experts_w_gate"][e],
+                        moe["experts_w_up"][e],
+                        moe["experts_w_down"][e],
+                        h[r],
+                    )
+                    y = y.at[r].add(
+                        ye * jnp.asarray(g)[:, None].astype(ye.dtype)
+                    )
+                    self.stats.expert_launches += 1
+                    self.stats.expert_tokens += int(r.size)
         return y
 
     # -- chunked decode ---------------------------------------------------
@@ -1114,8 +1203,19 @@ class ModuleBatchingEngine:
         dispatch.  Both paths are token-for-token identical
         (property-tested).
         """
-        tokens = jnp.asarray(tokens)
-        pos = jnp.asarray(pos, jnp.int32)
+        stale = self._stale_snapshot()
+        with sanitizer.allowed("decode-inputs"):
+            tokens = jnp.asarray(tokens)
+            pos = jnp.asarray(pos, jnp.int32)
+            live = None if live is None else jnp.asarray(live, bool)
+        with sanitizer.decode_region():
+            out = self._decode_chunk_guarded(tokens, pos, sampler, T, live)
+        self._poison_stale(stale)
+        return out
+
+    @hot_path
+    def _decode_chunk_guarded(self, tokens, pos, sampler, T: int,
+                              live=None) -> jax.Array:
         B = tokens.shape[0]
         if not (self.fused_eligible() and self.cache is not None):
             return self._chunk_rows_per_module(tokens, pos, sampler, T, 0, B,
@@ -1133,25 +1233,30 @@ class ModuleBatchingEngine:
             )
         n = B - n_host
         posv = jnp.broadcast_to(jnp.atleast_1d(pos), (B,)).astype(jnp.int32)
-        livev = (jnp.ones((B,), bool) if live is None
-                 else jnp.asarray(live, bool))
+        with sanitizer.allowed("decode-inputs"):
+            livev = (jnp.ones((B,), bool) if live is None
+                     else jnp.asarray(live, bool))
         idx = np.arange(n_host, B)
-        keys, steps, temps, topks = sampler.state(idx)
+        with sanitizer.allowed("sampler-state"):
+            keys, steps, temps, topks = sampler.state(idx)
+            keys_d, steps_d = jnp.asarray(keys), jnp.asarray(steps)
+            temps_d, topks_d = jnp.asarray(temps), jnp.asarray(topks)
         use_topk = bool((topks > 0).any())
         greedy_only = not bool((temps > 0).any())
         capacity = self._expert_capacity(n)
         cap = self.max_seq - 1
         key = (n, n_host, T, capacity, cap, use_topk, greedy_only)
-        if key not in self._fused_keys:
-            self._fused_keys.add(key)
+        if self._fused_keys.add(key):
             self.stats.decode_retraces += 1
+        with sanitizer.allowed("decode-row-slice"):
+            toks_d, posv_d = tokens[n_host:], posv[n_host:]
+            livev_d = livev[n_host:]
         toks, cache, kept, dropped = _fused_decode_chunk(
             self.cfg, tuple(self.schema), self.cfg.tie_embeddings, capacity,
             n_host, cap, use_topk, greedy_only, T,
             self.store.base, self._fused_layer_params(),
-            tokens[n_host:], posv[n_host:], livev[n_host:], tuple(self.cache),
-            jnp.asarray(keys), jnp.asarray(steps), jnp.asarray(temps),
-            jnp.asarray(topks),
+            toks_d, posv_d, livev_d, tuple(self.cache),
+            keys_d, steps_d, temps_d, topks_d,
         )
         self.cache = list(cache)
         self._kept_dev = self._kept_dev + kept
@@ -1174,25 +1279,42 @@ class ModuleBatchingEngine:
             return toks
         return jnp.concatenate([host_cols, toks], axis=0)
 
+    @hot_path
     def _chunk_rows_per_module(self, tokens, pos, sampler, T: int,
                                lo: int, hi: int, live=None) -> jax.Array:
         """Per-module chunk fallback over batch rows ``[lo, hi)``: ``T``
         sequential decode ticks, each sampled through the caller's
         ``BatchSampler`` (the streamed / loop-path / host-row execution).
         Dead rows (``live`` False) hold their stale token/position, like
-        per-tick stepping."""
+        per-tick stepping.
+
+        The per-tick position advance is HOST math: mixing the Python tick
+        index into device arithmetic (``posr + t``) was an implicit scalar
+        h2d transfer every tick — the exact pathology the sanitizer exists
+        to catch.  Instead a numpy mirror advances on the host and ONE
+        planned (n,)-vector upload per tick feeds the modules; the uploaded
+        aval (int32, same shape) is identical, so trace keys are unchanged.
+        The mirror also rides down to Mode B paging as ``pos_host``."""
         slots = np.arange(lo, hi)
-        cur = tokens[lo:hi]
-        posr = pos if pos.ndim == 0 else pos[lo:hi]
-        lv = None if live is None else jnp.asarray(live, bool)[lo:hi]
+        with sanitizer.allowed("decode-row-slice"):
+            cur = tokens[lo:hi]
+            posr = pos if pos.ndim == 0 else pos[lo:hi]
+            lv = None if live is None else jnp.asarray(live, bool)[lo:hi]
         if lv is not None and posr.ndim == 0:
             posr = jnp.broadcast_to(posr, (hi - lo,))
-        adv = None if lv is None else lv.astype(jnp.int32)
+        with sanitizer.allowed("decode-pos-host-mirror"):
+            pos_np = np.asarray(posr, np.int32)  # lint: allow[MG101] one planned readback per chunk; host mirror drives tick advance
+            adv_np = (None if lv is None
+                      else np.asarray(lv, np.int32))  # lint: allow[MG101] live mask readback, once per chunk
         cap = self.max_seq - 1
         cols = []
         for t in range(T):
-            pt = jnp.minimum(posr + (t if adv is None else t * adv), cap)
-            lg = self._decode_rows(cur, pt, lo)
+            pt_np = np.minimum(
+                pos_np + (t if adv_np is None else t * adv_np), cap
+            ).astype(np.int32)
+            with sanitizer.allowed("decode-pos-upload"):
+                pt = jnp.asarray(pt_np)
+            lg = self._decode_rows(cur, pt, lo, pt_np)
             sampled = sampler.sample(lg, slots)
             cols.append(sampled)
             cur = sampled if lv is None else jnp.where(lv, sampled, cur)

@@ -83,6 +83,13 @@ def main() -> None:
                     help="cache shared prompt prefixes at page granularity "
                          "and admit hits by page-row copy instead of "
                          "recomputing prefill (requires --kv-page-tokens)")
+    ap.add_argument("--sanitize", default="off",
+                    choices=("off", "log", "strict"),
+                    help="run serving under the analysis sanitizer: decode "
+                         "regions execute with jax.transfer_guard (strict "
+                         "raises on unplanned transfers, log records them) "
+                         "and donation aliasing is verified; prints the "
+                         "sanitizer report after serving")
     args = ap.parse_args()
 
     hw = PROFILES[args.profile]
@@ -173,14 +180,32 @@ def main() -> None:
             ),
         )
         print(f"page-pool residency (smoke): {probe.describe()}")
-    report = serve_dataset(cfg, params, requests, plan, args.decode_len,
-                           expert_path=args.expert_path,
-                           scheduler=args.scheduler, eos_id=args.eos_id,
-                           store=store,
-                           hw=hw if args.scheduler == "continuous" else None,
-                           kv_page_tokens=args.kv_page_tokens,
-                           device_kv_gb=args.device_kv_gb,
-                           prefix_cache=args.prefix_cache)
+    import contextlib
+
+    from repro import analysis
+
+    san_ctx = (analysis.sanitize(strict=args.sanitize == "strict",
+                                 donation=True)
+               if args.sanitize != "off" else contextlib.nullcontext())
+    with san_ctx as san:
+        report = serve_dataset(cfg, params, requests, plan, args.decode_len,
+                               expert_path=args.expert_path,
+                               scheduler=args.scheduler, eos_id=args.eos_id,
+                               store=store,
+                               hw=hw if args.scheduler == "continuous" else None,
+                               kv_page_tokens=args.kv_page_tokens,
+                               device_kv_gb=args.device_kv_gb,
+                               prefix_cache=args.prefix_cache)
+    if san is not None:
+        rep = san.report()
+        planned = ", ".join(f"{k}={v}" for k, v in
+                            sorted(rep["planned_transfers"].items())) or "none"
+        bad = [d for d in rep["donation_checks"] if not d["ok"]]
+        print(f"sanitizer[{rep['mode']}]: planned transfers: {planned}")
+        print(f"sanitizer: donation checks "
+              f"{len(rep['donation_checks']) - len(bad)}/"
+              f"{len(rep['donation_checks'])} ok; "
+              f"steady retraces: {sum(rep['steady_retraces'].values())}")
     print(f"served {args.requests} requests in {report.total_s:.2f}s "
           f"({report.decode_throughput:.1f} decode tok/s on this host, "
           f"{report.expert_tokens_dropped} routed copies dropped)")

@@ -46,7 +46,7 @@ def main() -> None:
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     if ctx.mesh is not None:
         shardings = param_shardings(ctx, params, zero1=True)
-        params = jax.device_put(params, shardings)
+        params = jax.device_put(params, shardings)  # lint: allow[MG105] init-time sharded placement, not a serving-path transfer
     n = sum(x.size for x in jax.tree.leaves(params))
     print(f"{cfg.name}: {n/1e6:.1f}M params, {args.steps} steps "
           f"of {args.batch}x{args.seq} on {n_dev} device(s)")

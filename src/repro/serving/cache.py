@@ -44,6 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import runtime as sanitizer
 from repro.configs.base import ModelConfig
 from repro.serving.weights import StreamWindow
 
@@ -375,7 +376,8 @@ class KVPageTable:
         assert self._window is not None
         epoch, k, v = self._window.acquire(li)
         if epoch != self._epoch[li]:
-            (epoch, k, v), nbytes = self._fetch_layer(li)
+            with sanitizer.allowed("stream-window"):
+                (epoch, k, v), nbytes = self._fetch_layer(li)
             self._window.htod_bytes += nbytes
             self._window.demand += 1
             jax.block_until_ready((k, v))

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.registry import TraceKeySet, register_jit
 from repro.configs.base import ModelConfig
 from repro.models import model as model_mod
 
@@ -114,6 +115,7 @@ def scatter_prefill_rows(
     return cache
 
 
+@register_jit("kvcache.evict", donated=("cache",))
 @functools.partial(jax.jit, donate_argnames=("cache",))
 def _evict_module(cache, rows):
     return jax.tree.map(
@@ -122,15 +124,16 @@ def _evict_module(cache, rows):
 
 
 # distinct padded eviction widths seen: each width is ONE cached trace of
-# _evict_module (per cache pytree structure) — the retrace-counter analogue
-# of EngineStats.decode_retraces, asserted in tests
-_EVICT_WIDTHS: set = set()
+# _evict_module (per cache pytree structure).  Backed by the analysis
+# registry's named TraceKeySet — ``evict_retraces()`` is now a thin shim
+# over it, and the sanitizer report picks the count up by name.
+_EVICT_WIDTHS = TraceKeySet("kvcache.evict_rows")
 
 
 def evict_retraces() -> int:
     """Number of distinct padded ``rows`` widths ``evict_rows`` has jitted
     with since import (eviction-set sizes 1..8 all share width 8)."""
-    return len(_EVICT_WIDTHS)
+    return _EVICT_WIDTHS.count
 
 
 def _pad_evict_rows(rows: Sequence[int]) -> np.ndarray:

@@ -25,6 +25,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import runtime as sanitizer
+from repro.analysis.registry import register_jit
+
 
 @dataclass(frozen=True)
 class SamplingParams:
@@ -105,8 +108,8 @@ def sample_tokens(logits, keys, steps, temps, topks, use_topk):
     return jnp.where(temps > 0, sampled, greedy_tok)
 
 
-_sample_module = functools.partial(jax.jit, static_argnames=("use_topk",))(
-    sample_tokens
+_sample_module = register_jit("sampling.sample")(
+    functools.partial(jax.jit, static_argnames=("use_topk",))(sample_tokens)
 )
 
 
@@ -183,13 +186,14 @@ class BatchSampler:
         if not (self._temps[idx] > 0).any():
             self._steps[idx] += 1
             return jnp.argmax(logits, axis=-1)
-        toks = _sample_module(
-            logits,
-            jnp.asarray(self._keys[idx]),
-            jnp.asarray(self._steps[idx]),
-            jnp.asarray(self._temps[idx]),
-            jnp.asarray(self._topks[idx]),
-            use_topk=bool((self._topks[idx] > 0).any()),
-        )
+        with sanitizer.allowed("sampler-state"):
+            toks = _sample_module(
+                logits,
+                jnp.asarray(self._keys[idx]),
+                jnp.asarray(self._steps[idx]),
+                jnp.asarray(self._temps[idx]),
+                jnp.asarray(self._topks[idx]),
+                use_topk=bool((self._topks[idx] > 0).any()),
+            )
         self._steps[idx] += 1
         return toks

@@ -1,0 +1,425 @@
+"""Static-analysis + sanitizer subsystem (ISSUE 7).
+
+The PR's contract, exercised rule class by rule class with a DELIBERATE
+violation of each: the AST lint catches every MG-rule pattern (and the
+repo itself lints clean); the runtime sanitizer raises on an unplanned
+transfer inside a decode region and passes planned ``allowed()`` scopes;
+``steady()`` raises when a registered jit compiles mid-steady-state; the
+donation checker verifies compiled-HLO aliasing for the real donated
+engine launches and catches a dropped donation; the stale-buffer poisoner
+makes retained cache references fail loudly.  The tier-1 serving test
+runs full ``Server.run()`` lifecycles — both schedulers x fused /
+streamed / paged Mode B — under ``sanitize(strict=True)`` with zero
+unplanned transfers and zero steady-state retraces.
+"""
+import functools
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import analysis
+from repro.analysis import donation, lint, registry, runtime
+from repro.configs import get_config
+from repro.core.dag_builder import Plan
+from repro.core.engine import ModuleBatchingEngine
+from repro.data.datasets import DatasetSpec, synthetic_requests
+from repro.models import model as M
+from repro.serving import kvcache
+from repro.serving.cache import CacheConfig
+from repro.serving.sampling import BatchSampler
+from repro.serving.server import ServeConfig, Server, StreamConfig
+
+KEY = jax.random.PRNGKey(0)
+SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src", "repro")
+
+
+def _mixtral():
+    cfg = get_config("mixtral-8x7b", smoke=True)
+    return cfg, M.init_params(cfg, KEY)
+
+
+def _rules(findings):
+    return sorted({f.rule for f in findings})
+
+
+# ---------------------------------------------------------------------------
+# AST lint: one deliberate violation per rule
+# ---------------------------------------------------------------------------
+def test_lint_mg101_host_sync_in_hot_path():
+    src = textwrap.dedent("""
+        import numpy as np
+        from repro.analysis import hot_path
+
+        @hot_path
+        def tick(x):
+            a = np.asarray(x)
+            b = x.item()
+            c = float(x)
+            x.block_until_ready()
+            return a, b, c
+    """)
+    found = lint.check_source(src, "t.py", "core/t.py")
+    assert _rules(found) == ["MG101"] and len(found) == 4
+
+
+def test_lint_mg101_ignores_cold_functions():
+    src = "import numpy as np\ndef cold(x):\n    return np.asarray(x)\n"
+    assert lint.check_source(src, "t.py", "core/t.py") == []
+
+
+def test_lint_mg102_jit_in_loop():
+    src = textwrap.dedent("""
+        import jax
+        def run(xs):
+            for x in xs:
+                f = jax.jit(lambda a: a + 1)
+                x = f(x)
+            return x
+    """)
+    assert _rules(lint.check_source(src, "t.py", "core/t.py")) == ["MG102"]
+
+
+def test_lint_mg103_frozen_config_mutation():
+    src = textwrap.dedent("""
+        def tweak(cfg, plan):
+            cfg.num_layers = 4
+            plan.B += 1
+            object.__setattr__(cfg, "d_model", 8)
+    """)
+    found = lint.check_source(src, "t.py", "core/t.py")
+    assert _rules(found) == ["MG103"] and len(found) == 3
+
+
+def test_lint_mg103_allows_construction_scopes():
+    src = textwrap.dedent("""
+        class C:
+            def __init__(self, cfg):
+                self.cfg = cfg
+        def __post_init__(self):
+            object.__setattr__(self, "x", 1)
+    """)
+    assert lint.check_source(src, "t.py", "core/t.py") == []
+
+
+def test_lint_mg104_update_slice_without_donation():
+    src = textwrap.dedent("""
+        import functools, jax
+        from jax import lax
+
+        @functools.partial(jax.jit)
+        def write(cache, v, i):
+            return lax.dynamic_update_slice(cache, v, (i,))
+
+        @functools.partial(jax.jit, donate_argnames=("cache",))
+        def write_ok(cache, v, i):
+            return lax.dynamic_update_slice(cache, v, (i,))
+    """)
+    found = lint.check_source(src, "t.py", "core/t.py")
+    assert _rules(found) == ["MG104"] and len(found) == 1
+
+
+def test_lint_mg105_device_put_outside_window():
+    src = "import jax\ndef f(x):\n    return jax.device_put(x)\n"
+    assert _rules(lint.check_source(src, "t.py", "core/t.py")) == ["MG105"]
+    # the StreamWindow modules own the planned htod path
+    assert lint.check_source(src, "t.py", "serving/weights.py") == []
+    assert lint.check_source(src, "t.py", "serving/cache.py") == []
+
+
+def test_lint_allowlist_suppression_and_mg106():
+    ok = textwrap.dedent("""
+        import numpy as np
+        from repro.analysis import hot_path
+        @hot_path
+        def tick(x):
+            return np.asarray(x)  # lint: allow[MG101] planned readback
+    """)
+    assert lint.check_source(ok, "t.py", "core/t.py") == []
+    # a suppression without a justification is itself a violation
+    bare = ok.replace(" planned readback", "")
+    assert _rules(lint.check_source(bare, "t.py", "core/t.py")) == ["MG106"]
+
+
+def test_lint_repo_is_clean():
+    assert lint.lint_paths([SRC]) == []
+
+
+def test_lint_cli_blocking_exit_codes(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(SRC, os.pardir)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", SRC],
+        env=env, capture_output=True, text=True,
+    )
+    assert out.returncode == 0, out.stdout + out.stderr
+    bad = tmp_path / "bad.py"
+    bad.write_text("import jax\n\n\ndef f(x):\n    return jax.device_put(x)\n")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", str(bad)],
+        env=env, capture_output=True, text=True,
+    )
+    assert out.returncode == 1 and "MG105" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# Runtime sanitizer: transfer guard, planned scopes, steady-state retraces
+# ---------------------------------------------------------------------------
+def test_decode_region_rejects_unplanned_transfer():
+    x = jnp.arange(4)
+    with analysis.sanitize(strict=True):
+        with runtime.decode_region():
+            with pytest.raises(Exception, match="[Dd]isallowed"):
+                _ = x + 1           # implicit Python-scalar h2d mid-tick
+
+
+def test_allowed_scope_permits_and_counts():
+    x = jnp.arange(4)
+    with analysis.sanitize(strict=True) as san:
+        with runtime.decode_region():
+            with analysis.allowed("test-tag"):
+                y = x + 1
+        np.testing.assert_array_equal(np.asarray(y), np.arange(1, 5))
+    assert san.planned["test-tag"] == 1
+    assert san.report()["planned_transfers"]["test-tag"] == 1
+
+
+def test_decode_region_without_sanitizer_is_noop():
+    x = jnp.arange(4)
+    with runtime.decode_region():
+        assert int(np.asarray(x + 1)[0]) == 1
+
+
+def test_steady_region_catches_retrace():
+    @analysis.register_jit("test.steady_fn")
+    @jax.jit
+    def f(x):
+        return x * 2
+
+    f(jnp.zeros(4))                 # warm one trace
+    with analysis.sanitize(strict=True) as san:
+        with san.steady():
+            f(jnp.zeros(4))         # cached: clean
+        with pytest.raises(analysis.RetraceViolation, match="test.steady_fn"):
+            with san.steady():
+                f(jnp.zeros(8))     # new shape: steady-state retrace
+    assert san.steady_retraces["test.steady_fn"] == 1
+
+
+def test_steady_region_logs_in_nonstrict_mode():
+    @analysis.register_jit("test.steady_log_fn")
+    @jax.jit
+    def f(x):
+        return x - 1
+
+    with analysis.sanitize(strict=False) as san:
+        with san.steady():
+            f(jnp.zeros(3))
+    assert san.steady_retraces == {"test.steady_log_fn": 1}
+
+
+def test_registry_counts_and_keysets():
+    counts = registry.compile_counts()
+    assert "engine.fused_decode_chunk" in counts
+    assert "kvcache.evict" in counts
+    ks = registry.TraceKeySet("test.keys")
+    assert ks.add(("a", 1)) and not ks.add(("a", 1)) and ks.add(("b",))
+    assert ks.count == 2 and registry.keyset_counts()["test.keys"] == 2
+
+
+def test_evict_retrace_shim_rides_the_registry():
+    base = kvcache.evict_retraces()
+    cache = [{"k": jnp.zeros((4, 8, 1, 2)), "v": jnp.zeros((4, 8, 1, 2))}]
+    cache = kvcache.evict_rows(cache, [1])          # width 8 (maybe seen)
+    cache = kvcache.evict_rows(cache, list(range(3)))   # width 8 again
+    assert kvcache.evict_retraces() >= max(1, base)
+    assert (registry.keyset_counts()["kvcache.evict_rows"]
+            == kvcache.evict_retraces())
+
+
+def test_ambient_env_sanitizer(tmp_path):
+    """REPRO_SANITIZE arms a process-wide sanitizer; the report dumps at
+    interpreter exit when REPRO_SANITIZE_REPORT is set."""
+    report = tmp_path / "san.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(SRC, os.pardir)
+    env["REPRO_SANITIZE"] = "strict"
+    env["REPRO_SANITIZE_REPORT"] = str(report)
+    snippet = (
+        "import jax.numpy as jnp\n"
+        "from repro.analysis import runtime\n"
+        "x = jnp.arange(4)\n"
+        "failed = False\n"
+        "with runtime.decode_region():\n"
+        "    try:\n"
+        "        x + 1\n"
+        "    except Exception:\n"
+        "        failed = True\n"
+        "assert failed, 'ambient strict guard did not trip'\n"
+        "with runtime.allowed('tag'):\n"
+        "    x + 1\n"
+    )
+    out = subprocess.run([sys.executable, "-c", snippet], env=env,
+                         capture_output=True, text=True)
+    assert out.returncode == 0, out.stdout + out.stderr
+    rep = json.loads(report.read_text())
+    assert rep["mode"] == "strict" and rep["planned_transfers"]["tag"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Donation checker + stale-buffer poisoner
+# ---------------------------------------------------------------------------
+def test_donation_check_confirms_real_aliasing():
+    @functools.partial(jax.jit, donate_argnames=("cache",))
+    def write(cache, v):
+        return cache.at[0].set(v)
+
+    cache, v = jnp.zeros((4, 8)), jnp.ones(8)
+    res = donation.check_donation(write, (cache, v), {}, ("cache",),
+                                  name="t.write")
+    assert res.ok and res.aliased >= 1 and res.donated_leaves == 1
+    assert not cache.is_deleted()   # AOT lowering must not consume buffers
+    write(cache, v)
+
+
+def test_donation_check_catches_dropped_donation():
+    @functools.partial(jax.jit, donate_argnames=("x",))
+    def grow(x):
+        return jnp.concatenate([x, x])  # (n,) can never alias (2n,)
+
+    res = donation.check_donation(grow, (jnp.zeros(4),), {}, ("x",),
+                                  name="t.grow")
+    assert not res.ok and res.dropped
+
+
+def test_sanitizer_raises_on_dropped_donation():
+    @analysis.register_jit("test.bad_donation", donated=("x",))
+    @functools.partial(jax.jit, donate_argnames=("x",))
+    def grow(x):
+        return jnp.concatenate([x, x])
+
+    with analysis.sanitize(strict=True, donation=True):
+        with pytest.raises(analysis.DonationViolation, match="bad_donation"):
+            grow(jnp.zeros(4))
+    # non-strict: recorded, not raised
+    with analysis.sanitize(strict=False, donation=True) as san:
+        grow(jnp.zeros(6))
+    assert [d["ok"] for d in san.donation_checks] == [False]
+
+
+def test_engine_donated_launches_alias(monkeypatch):
+    """The real donated engine launches alias their cache pytrees: run a
+    generation under donation checking and assert every intercepted check
+    verified (fused decode chunk + eviction are covered by the serving
+    test; this covers the per-module attention path too)."""
+    cfg, params = _mixtral()
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0,
+                              cfg.vocab_size)
+    with analysis.sanitize(strict=True, donation=True) as san:
+        eng = ModuleBatchingEngine(cfg, params,
+                                   Plan(B=2, b_a=2, b_e=16, omega=0.0),
+                                   max_seq=12, fused_decode=False)
+        eng.generate(toks, 3)
+    names = {d["name"] for d in san.donation_checks}
+    assert "engine.attn_decode" in names
+    assert all(d["ok"] for d in san.donation_checks), san.donation_checks
+
+
+def test_poison_stale_unit():
+    with analysis.sanitize(strict=False, poison=True):
+        a, b = jnp.arange(4), jnp.arange(5)
+        runtime.poison_stale([a, b], [b])
+        assert a.is_deleted() and not b.is_deleted()
+    # poison off: no-op
+    c, d = jnp.arange(4), jnp.arange(5)
+    with analysis.sanitize(strict=False, poison=False):
+        runtime.poison_stale([c, d], [d])
+    assert not c.is_deleted()
+
+
+def test_poisoner_makes_retained_cache_refs_fail_loudly():
+    cfg, params = _mixtral()
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 8), 0,
+                              cfg.vocab_size)
+    with analysis.sanitize(strict=False, poison=True):
+        eng = ModuleBatchingEngine(cfg, params,
+                                   Plan(B=2, b_a=2, b_e=16, omega=0.0),
+                                   max_seq=12)
+        out = eng.generate(toks, 2)
+        li = next(i for i, (k, _) in enumerate(eng.schema) if k == "attn")
+        retained = eng.cache[li]["k"]       # the bug the poisoner catches
+        sampler = BatchSampler(2)
+        eng.decode_chunk(out[:, -1], jnp.full((2,), 9, jnp.int32), sampler, 1)
+        with pytest.raises(RuntimeError):
+            np.asarray(retained)
+        np.asarray(eng.cache[li]["k"])      # the live buffer still reads
+
+
+# ---------------------------------------------------------------------------
+# Mode B position mirror: one planned readback per tick, not per layer
+# ---------------------------------------------------------------------------
+def test_paged_decode_pos_mirror_once_per_tick():
+    cfg, params = _mixtral()
+    toks = jax.random.randint(jax.random.PRNGKey(4), (2, 8), 0,
+                              cfg.vocab_size)
+    eng = ModuleBatchingEngine(
+        cfg, params, Plan(B=2, b_a=2, b_e=16, omega=0.0), max_seq=12,
+        cache_config=CacheConfig(page_tokens=4, device_pool_bytes=1.0),
+    )
+    assert eng.pages is None or True  # pages built at init_cache
+    eng.prefill(toks)
+    assert eng.pages is not None and not eng.pages.fully_resident
+    with analysis.sanitize(strict=True) as san:
+        eng.decode_step(toks[:, -1], jnp.full((2,), 8, jnp.int32))
+    n_attn = sum(1 for k, _ in eng.schema if k == "attn")
+    assert n_attn > 1               # the regression needs >1 attn layer
+    assert san.planned["decode-pos-host-mirror"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Tier-1 serving: full lifecycles under the strict sanitizer (satellite 3)
+# ---------------------------------------------------------------------------
+_SERVE_MODES = {
+    "fused": {},
+    "streamed": {"stream": StreamConfig(stream_weights=True,
+                                        resident_bytes=0.0, prefetch=True)},
+    "paged-b": {"kv_page_tokens": 4, "device_kv_gb": 1e-6},
+}
+
+
+@pytest.mark.parametrize("scheduler", ["static", "continuous"])
+@pytest.mark.parametrize("mode", sorted(_SERVE_MODES))
+def test_server_lifecycle_sanitized(scheduler, mode):
+    cfg, params = _mixtral()
+    opts = dict(_SERVE_MODES[mode])
+    stream = opts.pop("stream", None)
+    serve = ServeConfig(scheduler=scheduler, decode_len=3, **opts)
+    kw = {} if stream is None else {"stream": stream}
+    reqs = synthetic_requests(DatasetSpec("t", 3, 8, 3), cfg.vocab_size)
+    with analysis.sanitize(strict=True, donation=True) as san:
+        server = Server(cfg, params, Plan(B=2, b_a=2, b_e=16, omega=0.0),
+                        serve=serve, **kw)
+        handles = [server.submit(r) for r in reqs]
+        # warm pass: trace every module shape this workload uses
+        while server.step():
+            pass
+        for h in handles:
+            assert len(h.tokens) == 3
+        # steady pass: the identical workload must hit every cached trace
+        with san.steady():
+            h2 = [server.submit(r) for r in reqs]
+            while server.step():
+                pass
+        server.finalize()
+        for h in h2:
+            assert len(h.tokens) == 3
+    rep = san.report()
+    assert rep["steady_retraces"] == {}
+    assert all(d["ok"] for d in rep["donation_checks"]), rep["donation_checks"]
+    assert rep["planned_transfers"]["token-readback"] >= 1
