@@ -15,7 +15,8 @@ import json
 
 
 def main() -> None:
-    from benchmarks import engine_walltime, kernels, kv_paging, paper_tables
+    from benchmarks import (engine_walltime, expert_prefetch, kernels,
+                            kv_paging, paper_tables)
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("only", nargs="?", default=None,
@@ -25,7 +26,8 @@ def main() -> None:
     args = ap.parse_args()
 
     suites = (list(paper_tables.ALL) + list(engine_walltime.ALL)
-              + list(kernels.ALL) + list(kv_paging.ALL))
+              + list(kernels.ALL) + list(kv_paging.ALL)
+              + list(expert_prefetch.ALL))
     csv = []
     tables = []
     for fn in suites:

@@ -43,6 +43,13 @@ class Plan:
     #                             (planner.kv_device_pool_frames sizes it from
     #                             the Eq. 3 spare; 0 with paging on = Mode A,
     #                             everything device-resident)
+    predict_topk: int = 0       # predictive per-expert streaming: k-hat
+    #                             experts staged per streamed MoE layer from
+    #                             layer l's gate-logit prediction (0 = whole-
+    #                             stack staging).  Sizes the stream-window
+    #                             slot and the expected expert htod per layer;
+    #                             mispredictions demand-fetch, so correctness
+    #                             never depends on it
 
     def describe(self) -> str:
         out = (
@@ -54,6 +61,8 @@ class Plan:
         if self.kv_page_tokens:
             out += (f" pages={self.kv_page_tokens}tok"
                     f"x{self.kv_device_pages}dev")
+        if self.predict_topk:
+            out += f" pred_k={self.predict_topk}"
         return out
 
 
@@ -232,6 +241,13 @@ def build_decode_layer_dag(
         cap = max(1, min(plan.b_e, B))
         rows = float(cap) if cap < B else tokens_per_expert
         e_bytes = W.expert_weight_bytes(cfg) * miss["moe"]
+        # predictive per-expert prefetch: only ~k-hat experts move per
+        # streamed MoE layer (the predicted set; hits cost nothing extra,
+        # mispredictions swap one expert for another — expected traffic is
+        # the predicted-set size either way), so the per-expert htod charge
+        # scales by k-hat/E instead of each expert paying its full miss
+        if plan.predict_topk and cfg.num_experts:
+            e_bytes *= min(1.0, plan.predict_topk / cfg.num_experts)
         for e in range(cfg.num_experts):
             cp = dag.add(f"expert_w[{e}]", "htod", e_bytes / hw.htod_bw)
             dag.add(

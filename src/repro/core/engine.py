@@ -88,6 +88,7 @@ from repro.analysis import runtime as sanitizer
 from repro.analysis.markers import hot_path
 from repro.analysis.registry import TraceKeySet, register_jit
 from repro.configs.base import ModelConfig
+from repro.core import workload as W
 from repro.core.dag_builder import Plan
 from repro.core.host_attention import host_decode_attention
 from repro.models import attention as attn_mod
@@ -223,9 +224,11 @@ def _expert_module(wg, wu, wd, h_chunk):
 def _grouped_expert_math(cfg, p, x, capacity):
     """The whole MoE stage, traceable: norm -> route -> capacity-bucketed
     gather -> grouped FFN -> weighted scatter-add.  Returns (y, kept,
-    dropped); the counters stay on device.  Launched standalone by the
-    per-module path (``_grouped_expert_module``) and inlined by the fused
-    decode chunk — ONE implementation, so both paths are bit-identical."""
+    dropped, load); the counters — including the (E,) per-expert routed
+    histogram feeding the planner's measured-skew b_e search — stay on
+    device.  Launched standalone by the per-module path
+    (``_grouped_expert_module``) and inlined by the fused decode chunk —
+    ONE implementation, so both paths are bit-identical."""
     moe = p["moe"]
     h = rms_norm(x, p["norm2"], cfg.norm_eps)
     gates, idx, _ = moe_mod.route(cfg, moe["router"], h)
@@ -243,6 +246,40 @@ _grouped_expert_module = _counted(
         )
     )
 )
+
+
+@_counted
+@register_jit("engine.route_predict")
+@functools.partial(jax.jit, static_argnames=("cfg", "khat"))
+def _route_predict_module(cfg, khat, norm2_w, router_w, next_router_w, x):
+    """Routing + next-layer expert prediction for the predictive-streamed
+    MoE stage: norm2 -> route THIS layer, then score the NEXT streamed MoE
+    layer's router on the current hidden state (``moe.predict_experts``).
+
+    Returns ``(h, gates, idx, packed)`` where ``packed`` is one int32
+    vector — the (E,) routed-copy counts of this layer (which experts'
+    weights the grouped FFN actually needs, and the load histogram the
+    capacity re-planner consumes) concatenated with the (k-hat,) predicted
+    ids for the next layer — so the engine reads back EVERYTHING it needs
+    under ONE planned transfer per layer."""
+    h = rms_norm(x, norm2_w, cfg.norm_eps)
+    gates, idx, _ = moe_mod.route(cfg, router_w, h)
+    used = jnp.zeros((cfg.num_experts,), jnp.int32).at[idx.reshape(-1)].add(1)
+    pred = moe_mod.predict_experts(cfg, next_router_w, x, khat)
+    return h, gates, idx, jnp.concatenate([used, pred])
+
+
+@_counted
+@register_jit("engine.grouped_expert_ffn")
+@functools.partial(jax.jit, static_argnames=("cfg", "capacity"))
+def _grouped_ffn_module(cfg, capacity, h, gates, idx, wg, wu, wd):
+    """Grouped FFN over PRE-ROUTED tokens with externally assembled expert
+    stacks — the second half of the predictive-streamed MoE stage.  The
+    stacks carry true weights for every expert with a routed copy and the
+    zeros filler elsewhere (``ParamStore.acquire_experts``), which is
+    bit-identical to the full stack: an unrouted expert's capacity rows are
+    all-zero and its outputs are never gathered back."""
+    return moe_mod.grouped_dispatch(cfg, h, gates, idx, wg, wu, wd, capacity)
 
 
 @_counted
@@ -292,6 +329,53 @@ def _prefill_layer_module(cfg, kind, ffn, sctx, p, x, positions, lengths):
     MoE path — grouped prefill passes ``moe_capacity`` = the micro-batch
     token count, so no routed copy is dropped."""
     return layer_forward(cfg, kind, ffn, p, x, sctx, positions, lengths)
+
+
+@_counted
+@register_jit("engine.prefill_mixer_route")
+@functools.partial(jax.jit, static_argnames=("cfg", "kind"))
+def _prefill_mixer_route_module(cfg, kind, p, x, positions, lengths):
+    """Mixer half of a grouped-prefill MoE layer, plus routing: norm1 ->
+    attention/SSM -> residual -> norm2 -> route.  Splitting the layer here
+    lets the engine read back the micro-batch's measured max per-expert
+    load (ONE planned scalar per layer per micro-batch) and size the
+    grouped FFN's capacity to the next power-of-two bucket >= it, instead
+    of pinning capacity to the full micro-batch token count.  Zero-drop —
+    and therefore bit-identity with the single-launch layer — holds for
+    ANY capacity >= the max load: every routed copy keeps its slot, and
+    buffer rows beyond the load are zero-padded lanes whose outputs are
+    never gathered back."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if kind == "attn":
+        y, entry = attn_mod.attn_forward(cfg, p["attn"], h, ShardCtx(),
+                                         positions, lengths)
+    else:
+        y, entry = ssm_mod.ssm_forward(cfg, p["ssm"], h, ShardCtx(), lengths)
+    x = x + y
+    hh = rms_norm(x, p["norm2"], cfg.norm_eps)
+    xt = hh.reshape(-1, x.shape[-1])
+    gates, idx, _ = moe_mod.route(cfg, p["moe"]["router"], xt)
+    load = jnp.zeros((cfg.num_experts,), jnp.int32).at[idx.reshape(-1)].add(1)
+    return x, entry, xt, gates, idx, jnp.max(load), aux
+
+
+@_counted
+@register_jit("engine.prefill_moe_ffn")
+@functools.partial(jax.jit, static_argnames=("cfg", "capacity"))
+def _prefill_moe_ffn_module(cfg, capacity, moe_p, x, xt, gates, idx):
+    """Grouped-FFN half of the split prefill MoE layer, at the measured
+    pow2-bucketed ``capacity``.  Same dispatch math as ``moe_apply_grouped``
+    (route happened in the mixer half), so the residual-added output is
+    bit-identical to the unsplit layer whenever no copy drops — guaranteed
+    by capacity >= the measured max load."""
+    y, _, dropped, _ = moe_mod.grouped_dispatch(
+        cfg, xt, gates, idx,
+        moe_p["experts_w_gate"], moe_p["experts_w_up"],
+        moe_p["experts_w_down"], capacity,
+    )
+    B, S, D = x.shape
+    return x + y.reshape(B, S, D).astype(x.dtype), dropped
 
 
 # ---------------------------------------------------------------------------
@@ -470,9 +554,13 @@ def _fused_decode_chunk(cfg, schema, tie, capacity, lo, pos_cap, use_topk,
       advancing in-carry, so seeded streams are bit-identical to
       per-module decode.
 
-    Returns ``(toks (n, T), cache, kept, dropped)``.
+    Returns ``(toks (n, T), cache, kept, dropped, load)`` — ``dropped`` a
+    per-MoE-layer (n_moe,) vector and ``load`` the (n_moe, E) per-expert
+    routed-copy histogram, both accumulated in-carry on device.
     """
     n = tokens.shape[0]
+    n_moe = sum(1 for _, f in schema if f == "moe")
+    E = max(1, cfg.num_experts)
     # optimization barriers mark the per-module boundaries inside the one
     # launch: XLA may not fuse across them, so every module subgraph
     # compiles exactly like its standalone per-module counterpart — which
@@ -482,10 +570,11 @@ def _fused_decode_chunk(cfg, schema, tie, capacity, lo, pos_cap, use_topk,
     bar = lax.optimization_barrier
 
     def tick(carry, _):
-        toks, pos, cache, steps, kept, dropped = carry
+        toks, pos, cache, steps, kept, dropped, load = carry
         cache = list(cache)
         x = bar(jnp.take(base["embed"], toks, axis=0))
         posv = jnp.minimum(pos, pos_cap)
+        moe_j = 0
         for li, (kind, ffn) in enumerate(schema):
             p = layer_params[li]
             if kind == "attn":
@@ -515,10 +604,12 @@ def _fused_decode_chunk(cfg, schema, tie, capacity, lo, pos_cap, use_topk,
                 cache[li] = {"h": nh, "conv": nc}
                 x = bar(x + y)
             if ffn == "moe":
-                y, kp, dr = _grouped_expert_math(cfg, p, x, capacity)
-                y, kp, dr = bar((y, kp, dr))
+                y, kp, dr, ld = _grouped_expert_math(cfg, p, x, capacity)
+                y, kp, dr, ld = bar((y, kp, dr, ld))
                 kept = kept + kp
-                dropped = dropped + dr
+                dropped = dropped.at[moe_j].add(dr)
+                load = load.at[moe_j].add(ld)
+                moe_j += 1
                 x = bar(x + y)
             elif cfg.d_ff > 0 and "ffn" in p:
                 y = bar(ffn_apply(p["ffn"],
@@ -532,14 +623,15 @@ def _fused_decode_chunk(cfg, schema, tie, capacity, lo, pos_cap, use_topk,
         carry_tok = jnp.where(live, nxt, toks)     # dead rows hold stale tok
         carry_pos = pos + live.astype(pos.dtype)   # ...at their stale pos
         return (carry_tok, carry_pos, tuple(cache), steps + 1, kept,
-                dropped), nxt
+                dropped, load), nxt
 
     zero = jnp.zeros((), jnp.int32)
-    carry0 = (tokens, pos, tuple(cache), steps, zero, zero)
-    (_, _, cache, _, kept, dropped), ys = lax.scan(
+    carry0 = (tokens, pos, tuple(cache), steps, zero,
+              jnp.zeros((n_moe,), jnp.int32), jnp.zeros((n_moe, E), jnp.int32))
+    (_, _, cache, _, kept, dropped, load), ys = lax.scan(
         tick, carry0, None, length=T
     )
-    return jnp.swapaxes(ys, 0, 1), cache, kept, dropped
+    return jnp.swapaxes(ys, 0, 1), cache, kept, dropped, load
 
 
 # ---------------------------------------------------------------------------
@@ -561,6 +653,18 @@ class EngineStats:
     kv_htod_bytes: int = 0               # streamed KV-page bytes copied htod
     kv_dtoh_bytes: int = 0               # KV bytes spilled device->host
     kv_stream_wait_s: float = 0.0        # stall waiting on page transfers
+    expert_tokens_dropped_by_layer: Optional[np.ndarray] = None
+    #                                      (n_moe,) int64 per-MoE-layer drops;
+    #                                      sums to expert_tokens_dropped
+    expert_load: Optional[np.ndarray] = None
+    #                                      (n_moe, E) int64 routed-copy
+    #                                      histogram (pre-capacity) — the
+    #                                      measured-skew input to the
+    #                                      planner's capacity_for_load
+    expert_pred_hits: int = 0            # routed experts found prefetched
+    expert_pred_misses: int = 0          # routed experts demand-fetched
+    expert_lru_hits: int = 0             # routed experts served from the LRU
+    expert_lru_bytes: int = 0            # device bytes the hot-expert LRU pins
 
 
 class ModuleBatchingEngine:
@@ -643,8 +747,29 @@ class ModuleBatchingEngine:
         self.stats = EngineStats()
         # device-side counters, folded into `stats` by sync_stats(); keeping
         # them lazy is what lets decode_step run without a single host sync.
+        # Drops and routed-load histograms accumulate PER MoE LAYER — the
+        # vectors stay on device (vector += vector only, no indexing inside
+        # decode regions, which would upload index scalars under the
+        # transfer guard).
+        self._moe_layers = [li for li, (_, f) in enumerate(self.schema)
+                            if f == "moe"]
+        self._moe_index = {li: j for j, li in enumerate(self._moe_layers)}
+        n_moe = len(self._moe_layers)
+        E = max(1, cfg.num_experts)
         self._kept_dev = jnp.zeros((), jnp.int32)
-        self._dropped_dev = jnp.zeros((), jnp.int32)
+        self._dropped_dev_l = [jnp.zeros((), jnp.int32)
+                               for _ in range(n_moe)]
+        self._load_dev_l = [jnp.zeros((E,), jnp.int32) for _ in range(n_moe)]
+        self._dropped_chunk_dev = jnp.zeros((n_moe,), jnp.int32)
+        self._load_chunk_dev = jnp.zeros((n_moe, E), jnp.int32)
+        # online capacity re-plan hook (serving.Server): overrides the
+        # plan's b_e when measured routing skew drifts; None = plan value
+        self._b_e_override: Optional[int] = None
+        # predictive-streaming test seam: when set, a callable
+        # ``predictor(next_layer, khat) -> iterable expert ids`` replaces
+        # the device-computed prediction for PREFETCH decisions only —
+        # correctness is predictor-independent (mispredictions demand-fetch)
+        self.predictor = None
         self._batch = 0
         # fused-path bookkeeping: per-layer param tuple (aliases the
         # resident arrays) and the set of (B, path, chunk) trace keys seen
@@ -655,20 +780,59 @@ class ModuleBatchingEngine:
         self._fused_keys = TraceKeySet("engine.fused_decode_chunk")
 
     def _expert_capacity(self, batch: int) -> int:
-        """Per-expert capacity C: the plan's b_e, clamped to the most tokens
-        any one expert can receive (top-k indices are distinct per token)."""
-        return max(1, min(self.plan.b_e, batch))
+        """Per-expert capacity C: the plan's b_e (or the online re-plan
+        override), clamped to the most tokens any one expert can receive
+        (top-k indices are distinct per token)."""
+        b_e = (self.plan.b_e if self._b_e_override is None
+               else self._b_e_override)
+        return max(1, min(b_e, batch))
+
+    def set_expert_capacity(self, b_e: Optional[int]) -> None:
+        """Online capacity re-plan entry point (``Server`` calls this when
+        measured routing skew drifts): override the plan's ``b_e`` for
+        subsequent decode dispatches.  ``None`` restores the plan value.
+        Changing capacity changes the dispatch-buffer shape, so the next
+        fused chunk retraces ONCE (counted in ``decode_retraces``)."""
+        self._b_e_override = None if b_e is None else max(1, int(b_e))
 
     def sync_stats(self) -> EngineStats:
         """Materialize the device-side expert counters (one host sync) and
-        drain the store's transfer accounting."""
+        drain the store's transfer + predictive-streaming accounting."""
         self.stats.expert_tokens += int(self._kept_dev)
-        self.stats.expert_tokens_dropped += int(self._dropped_dev)
         self._kept_dev = jnp.zeros((), jnp.int32)
-        self._dropped_dev = jnp.zeros((), jnp.int32)
+        n_moe = len(self._moe_layers)
+        if n_moe:
+            E = self._load_chunk_dev.shape[1]
+            dropped = np.asarray(self._dropped_chunk_dev, np.int64) + np.array(
+                [int(d) for d in self._dropped_dev_l], np.int64
+            )
+            load = np.asarray(self._load_chunk_dev, np.int64) + np.stack(
+                [np.asarray(v, np.int64) for v in self._load_dev_l]
+            )
+            self.stats.expert_tokens_dropped += int(dropped.sum())
+            if self.stats.expert_tokens_dropped_by_layer is None:
+                self.stats.expert_tokens_dropped_by_layer = np.zeros(
+                    n_moe, np.int64
+                )
+                self.stats.expert_load = np.zeros((n_moe, E), np.int64)
+            self.stats.expert_tokens_dropped_by_layer += dropped
+            self.stats.expert_load += load
+            self._dropped_dev_l = [jnp.zeros((), jnp.int32)
+                                   for _ in range(n_moe)]
+            self._load_dev_l = [jnp.zeros((E,), jnp.int32)
+                                for _ in range(n_moe)]
+            self._dropped_chunk_dev = jnp.zeros((n_moe,), jnp.int32)
+            self._load_chunk_dev = jnp.zeros((n_moe, E), jnp.int32)
         htod, wait = self.store.take_counters()
         self.stats.weight_htod_bytes += htod
         self.stats.prefetch_wait_s += wait
+        take_ec = getattr(self.store, "take_expert_counters", None)
+        if take_ec is not None:
+            ec = take_ec()
+            self.stats.expert_pred_hits += ec["pred_hits"]
+            self.stats.expert_pred_misses += ec["pred_misses"]
+            self.stats.expert_lru_hits += ec["lru_hits"]
+            self.stats.expert_lru_bytes = ec["lru_bytes_used"]
         if self.pages is not None:
             kv_htod, kv_dtoh, kv_wait = self.pages.take_counters()
             self.stats.kv_htod_bytes += kv_htod
@@ -828,13 +992,30 @@ class ModuleBatchingEngine:
         for li, (kind, ffn) in enumerate(self.schema):
             p = self.store.acquire(li)
             self.store.prefetch(li + 1)     # hide l+1's copy behind this layer
+            # grouped-prefill MoE layers split into mixer+route / grouped-FFN
+            # launches so the FFN capacity can be the next pow2 bucket over
+            # the micro-batch's MEASURED max expert load instead of the full
+            # token count — smaller (E, C, D) buffers, zero drops preserved
+            split_moe = ffn == "moe" and self.grouped_prefill
             outs = []
             for (lo, hi), x in zip(spans, xs):
-                sctx = self._prefill_sctx((hi - lo) * S)
                 ln = None if lengths is None else lengths[lo:hi]
-                y, entry, _ = _prefill_layer_module(
-                    cfg, kind, ffn, sctx, p, x, positions, ln
-                )
+                if split_moe:
+                    x_mid, entry, xt, gates, idx, max_load, _ = (
+                        _prefill_mixer_route_module(
+                            cfg, kind, p, x, positions, ln
+                        )
+                    )
+                    with sanitizer.allowed("prefill-capacity-probe"):
+                        cap = W.next_pow2(int(np.asarray(max_load)))
+                    y, _ = _prefill_moe_ffn_module(
+                        cfg, cap, p["moe"], x_mid, xt, gates, idx
+                    )
+                else:
+                    sctx = self._prefill_sctx((hi - lo) * S)
+                    y, entry, _ = _prefill_layer_module(
+                        cfg, kind, ffn, sctx, p, x, positions, ln
+                    )
                 self._write_cache_rows(li, kind, entry, rows[lo:hi])
                 outs.append(y)
             xs = outs
@@ -956,7 +1137,13 @@ class ModuleBatchingEngine:
                 pos_host = np.asarray(pos, np.int32)  # lint: allow[MG101] planned once-per-tick position readback for the page table
         x = _embed_module(cfg, self.store.base["embed"], tokens)
         for li, (kind, ffn) in enumerate(self.schema):
-            p = self.store.acquire(li)
+            # predictive-streamed MoE layers skip the full expert-stack
+            # assembly in acquire(): the stage fetches only the experts the
+            # router actually used (plus LRU hits) and prefetches the
+            # predicted set for the next streamed MoE layer
+            predictive = (ffn == "moe" and self.expert_path == "grouped"
+                          and self.store.streams_experts(li))
+            p = self.store.acquire(li, experts=not predictive)
             if kind == "attn":
                 x = x + self._attention_stage(li, p, x, pos, row0, pos_host)
             else:
@@ -969,7 +1156,10 @@ class ModuleBatchingEngine:
             if self.pages is not None:
                 self.pages.prefetch(li + 1)  # next layer's host KV frames
             if ffn == "moe":
-                x = x + self._expert_stage(p, x)
+                if predictive:
+                    x = x + self._expert_stage_predictive(li, x)
+                else:
+                    x = x + self._expert_stage(li, p, x)
             elif cfg.d_ff > 0 and "ffn" in p:
                 x = x + _ffn_module(cfg, p, x)
         return _head_module(cfg, cfg.tie_embeddings, self.store.base, x)
@@ -1128,21 +1318,72 @@ class ModuleBatchingEngine:
             self.stats.device_attn_tokens += nd
         return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
 
-    def _expert_stage(self, p, x) -> jax.Array:
+    def _expert_stage(self, li, p, x) -> jax.Array:
         if self.expert_path == "grouped":
-            return self._expert_stage_grouped(p, x)
+            return self._expert_stage_grouped(li, p, x)
         return self._expert_stage_loop(p, x)
 
-    def _expert_stage_grouped(self, p, x) -> jax.Array:
+    def _expert_stage_grouped(self, li, p, x) -> jax.Array:
         """One grouped-dispatch launch for the whole MoE stage: routing,
         gather, expert FFNs and combine all stay on device (§4.2 realized
         as a single module launch instead of a host-scheduled expert loop)."""
-        y, kept, dropped = _grouped_expert_module(
+        y, kept, dropped, load = _grouped_expert_module(
             self.cfg, p, x, self._expert_capacity(x.shape[0])
         )
         self.stats.expert_launches += 1
+        j = self._moe_index[li]
         self._kept_dev = self._kept_dev + kept
-        self._dropped_dev = self._dropped_dev + dropped
+        self._dropped_dev_l[j] = self._dropped_dev_l[j] + dropped
+        self._load_dev_l[j] = self._load_dev_l[j] + load
+        return y
+
+    def _next_streamed_moe(self, li: int) -> int:
+        """The next MoE layer (wrapping) whose experts are streamed — the
+        prediction target for layer ``li``'s gate tap.  Its norm2/router
+        live in the store's pinned ``moe_shared`` set, so scoring it needs
+        no expert bytes."""
+        streamed = [l for l in self._moe_layers
+                    if self.store.streams_experts(l)]
+        pos = streamed.index(li)
+        return streamed[(pos + 1) % len(streamed)]
+
+    @hot_path
+    def _expert_stage_predictive(self, li, x) -> jax.Array:
+        """Predictive-streamed MoE stage: route + predict in ONE launch,
+        read the packed (used-counts ++ predicted-ids) vector back under a
+        single planned transfer, assemble only the USED experts' stacks
+        (LRU/prefetch hits are free; mispredictions demand-fetch), issue
+        the next streamed MoE layer's predicted prefetch, then run the
+        grouped FFN.  Prediction moves WHEN bytes move, never WHICH math
+        runs — the dispatch consumes the true routing, so output is
+        bit-identical to the whole-stack path for any predictor."""
+        cfg = self.cfg
+        E = cfg.num_experts
+        shared = self.store.moe_shared(li)
+        nli = self._next_streamed_moe(li)
+        khat = self.store.predict_topk
+        h, gates, idx, packed = _route_predict_module(
+            cfg, khat, shared["norm2"], shared["router"],
+            self.store.moe_shared(nli)["router"], x,
+        )
+        with sanitizer.allowed("expert-prefetch"):
+            packed_np = np.asarray(packed)  # lint: allow[MG101] ONE planned readback per predictive MoE layer: routed-copy counts + predicted ids
+        used = np.nonzero(packed_np[:E])[0]
+        if self.predictor is not None:      # test seam: prefetch-only
+            pred = np.asarray(list(self.predictor(nli, khat)), np.int64)  # lint: allow[MG101] host-list coercion of the injected predictor's ids, no device buffer involved
+        else:
+            pred = packed_np[E:]
+        wg, wu, wd = self.store.acquire_experts(li, used)
+        self.store.prefetch_experts(nli, pred)
+        y, kept, dropped, load = _grouped_ffn_module(
+            cfg, self._expert_capacity(x.shape[0]), h, gates, idx,
+            wg, wu, wd,
+        )
+        self.stats.expert_launches += 1
+        j = self._moe_index[li]
+        self._kept_dev = self._kept_dev + kept
+        self._dropped_dev_l[j] = self._dropped_dev_l[j] + dropped
+        self._load_dev_l[j] = self._load_dev_l[j] + load
         return y
 
     def _expert_stage_loop(self, p, x) -> jax.Array:
@@ -1251,7 +1492,7 @@ class ModuleBatchingEngine:
         with sanitizer.allowed("decode-row-slice"):
             toks_d, posv_d = tokens[n_host:], posv[n_host:]
             livev_d = livev[n_host:]
-        toks, cache, kept, dropped = _fused_decode_chunk(
+        toks, cache, kept, dropped, load = _fused_decode_chunk(
             self.cfg, tuple(self.schema), self.cfg.tie_embeddings, capacity,
             n_host, cap, use_topk, greedy_only, T,
             self.store.base, self._fused_layer_params(),
@@ -1260,7 +1501,8 @@ class ModuleBatchingEngine:
         )
         self.cache = list(cache)
         self._kept_dev = self._kept_dev + kept
-        self._dropped_dev = self._dropped_dev + dropped
+        self._dropped_chunk_dev = self._dropped_chunk_dev + dropped
+        self._load_chunk_dev = self._load_chunk_dev + load
         sampler.advance(idx, T)
         self.stats.fused_dispatches += 1
         self.stats.fused_ticks += T

@@ -59,6 +59,13 @@ def select_residency(
     (``workload.plan_residency`` — the exact set the executor's ParamStore
     pins).  Returns None when not even the always-resident base weights and
     one stream window fit.
+
+    ``plan.predict_topk > 0`` sizes the stream-window slot by the EXPECTED
+    predicted-expert set (k-hat experts per MoE layer) instead of the
+    worst-layer whole stack — the bytes that frees are greedily re-pinned
+    by ``plan_residency`` as extra resident modules, and whatever the
+    greedy fill still leaves over becomes the store's hot-expert LRU
+    budget (``ResidencyPlan.spare_bytes``).
     """
     footprint = device_memory_used(
         cfg, replace(plan, s_params=0.0, s_expert=0.0), ctx, phase
@@ -69,11 +76,61 @@ def select_residency(
     mb = W.model_bytes(cfg)
     if mb <= spare:
         return replace(plan, s_params=float(mb), s_expert=0.0)
-    s_expert = W.stream_buffer_bytes(cfg, depth=2)
+    s_expert = W.stream_buffer_bytes(
+        cfg, depth=2, predict_topk=getattr(plan, "predict_topk", 0)
+    )
     rp = W.plan_residency(cfg, spare - s_expert)
     if rp.resident_bytes + s_expert > spare:
         return None                         # base weights + window don't fit
     return replace(plan, s_params=rp.resident_bytes, s_expert=s_expert)
+
+
+def default_predict_topk(cfg: ModelConfig) -> int:
+    """Default predicted-set size k-hat for predictive expert streaming:
+    twice the routed top-k (headroom for batch diversity — different rows
+    route to different experts), clamped to the expert count.  0 for
+    non-MoE configs (prediction is meaningless without experts)."""
+    if not cfg.has_moe:
+        return 0
+    return min(cfg.num_experts, max(2, 2 * cfg.experts_per_token))
+
+
+def capacity_for_load(
+    load: Iterable[float], B: int, k: int, max_drop_rate: float = 0.0
+) -> int:
+    """Smallest per-expert capacity ``b_e`` whose EXPECTED drop rate under
+    the measured routing distribution stays within ``max_drop_rate``.
+
+    ``load`` is a per-expert routed-copy histogram (the device-side
+    accumulation ``EngineStats.expert_load`` drains — any non-negative
+    weights work; only the shares matter).  A decode step routes ``B * k``
+    copies; expert *e* expects ``n_e = B * k * share_e`` of them and drops
+    ``max(0, n_e - C)`` beyond capacity ``C``.  This replaces the uniform-
+    routing assumption of the a-priori ``b_e`` grid: under skew the hot
+    expert's share — not ``k/E`` — is what sizes the dispatch buffer.
+
+    Binary-searches C in ``[1, B]`` (a single expert can receive at most
+    one copy per token).  ``max_drop_rate=0`` returns the zero-expected-
+    drop capacity, i.e. the measured-max expert share of a step."""
+    shares = [max(0.0, float(x)) for x in load]
+    total = sum(shares)
+    copies = float(max(1, B) * max(1, k))
+    if total <= 0.0:
+        return max(1, min(B, -(-int(copies) // max(1, len(shares) or 1))))
+    exp = [s / total * copies for s in shares]
+    budget = max_drop_rate * copies
+
+    def dropped(C: int) -> float:
+        return sum(max(0.0, n - C) for n in exp)
+
+    lo, hi = 1, max(1, B)
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if dropped(mid) <= budget:
+            hi = mid
+        else:
+            lo = mid + 1
+    return lo
 
 
 def select_decode_chunk(
@@ -128,14 +185,21 @@ def device_memory_used(
         s_is = W.intermediate_bytes_prefill(cfg, plan.b_a, ctx)
     # accumulated hidden states for the expert stage + the grouped-dispatch
     # (E, C, D) capacity buffer.  At decode C = b_e (clamped to the tokens
-    # that exist); at prefill the engine auto-raises C to the micro-batch
-    # token count b_a*seq (zero-drop grouped prefill), so that is what
-    # Eq. 3 must charge — not the decode b_e.
+    # that exist); at prefill the engine sizes C to the next power-of-two
+    # bucket over the micro-batch's MEASURED per-expert routed load (zero
+    # drops still guaranteed — the bucket is >= the max load), so Eq. 3
+    # charges the expected bucket: the balanced per-expert share with the
+    # config's capacity-factor headroom, pow2-rounded, capped at the full
+    # micro-batch token count (the worst-case bucket under total skew).
     tokens = plan.B * (ctx if phase == "prefill" else 1)
     s_is += tokens * 2 * cfg.d_model * W.BYTES
     if cfg.has_moe:
         if phase == "prefill":
-            cap = max(1, min(plan.b_a * ctx, tokens))
+            mb_tokens = max(1, min(plan.b_a * ctx, tokens))
+            per_e = -(-mb_tokens * cfg.experts_per_token
+                      // max(cfg.num_experts, 1))
+            cap = min(mb_tokens,
+                      W.next_pow2(int(per_e * cfg.capacity_factor) + 1))
         else:
             cap = max(1, min(plan.b_e, tokens))
         s_is += W.expert_buffer_bytes(cfg, cap)
@@ -204,7 +268,17 @@ def search_decode(
     decode_len: Optional[int] = None,
     arrival_rate: float = 0.0,
     scheduler: str = "continuous",
+    expert_load: Optional[Iterable[float]] = None,
+    max_drop_rate: float = 0.01,
 ) -> SearchResult:
+    """``expert_load`` (a per-expert routed-copy histogram, e.g. a drained
+    ``EngineStats.expert_load`` row or its layer sum) replaces the uniform-
+    routing ``b_e`` grid with ``capacity_for_load`` capacities at a few
+    drop-rate targets around ``max_drop_rate`` — the measured-skew search.
+    Candidates also enumerate ``predict_topk`` in {0, default} so the cost
+    model can trade whole-stack streaming against predictive per-expert
+    prefetch (smaller stream window, more resident bytes, k-hat experts of
+    htod per MoE layer instead of E)."""
     B_max = host_batch_limit(cfg, hw, ctx)
     if B_max == 0:
         raise ValueError(f"{cfg.name} does not fit in host memory")
@@ -232,32 +306,52 @@ def search_decode(
         # speed, which the throughput objective cannot see), clamped to B
         # (the most tokens one expert can receive per decode step).
         if cfg.has_moe:
-            per_e = max(
-                1, -(-B_try * cfg.experts_per_token // max(cfg.num_experts, 1))
-            )
-            b_e_grid = sorted(
-                {max(1, min(B_try, int(per_e * f)))
-                 for f in (1.0, 1.25, 1.5, 2.0)}
-            )
+            if expert_load is not None:
+                # measured-skew capacities: the drop-rate-constrained
+                # search over the observed routing distribution, bracketed
+                # with zero-drop and a looser target so the throughput
+                # objective can trade buffer bytes against drops
+                b_e_grid = sorted({
+                    capacity_for_load(expert_load, B_try,
+                                      cfg.experts_per_token, eps)
+                    for eps in (0.0, max_drop_rate, 4 * max_drop_rate)
+                })
+            else:
+                per_e = max(
+                    1, -(-B_try * cfg.experts_per_token
+                         // max(cfg.num_experts, 1))
+                )
+                b_e_grid = sorted(
+                    {max(1, min(B_try, int(per_e * f)))
+                     for f in (1.0, 1.25, 1.5, 2.0)}
+                )
+            pt_grid = sorted({0, default_predict_topk(cfg)})
         else:
             b_e_grid = [1]
+            pt_grid = [0]
         for b_a in _pow2_grid(32, max(32, B_try)):
             for b_e in b_e_grid:
                 for omega in omega_grid:
-                    plan = select_residency(
-                        cfg, hw,
-                        Plan(B=B_try, b_a=b_a, b_e=b_e, omega=omega,
-                             phase="decode"),
-                        ctx, "decode",
-                    )
-                    if plan is None or not device_memory_ok(
-                        cfg, hw, plan, ctx, "decode"
-                    ):
-                        continue
-                    est = estimate_decode(cfg, hw, plan, ctx)
-                    n_eval += 1
-                    if best is None or est.throughput > best[0]:
-                        best = (est.throughput, plan, est)
+                    for pt in pt_grid:
+                        plan = select_residency(
+                            cfg, hw,
+                            Plan(B=B_try, b_a=b_a, b_e=b_e, omega=omega,
+                                 phase="decode", predict_topk=pt),
+                            ctx, "decode",
+                        )
+                        if plan is None or not device_memory_ok(
+                            cfg, hw, plan, ctx, "decode"
+                        ):
+                            continue
+                        # prediction only matters when experts stream
+                        if pt and W.plan_residency(
+                            cfg, plan.s_params
+                        ).fully_resident:
+                            continue
+                        est = estimate_decode(cfg, hw, plan, ctx)
+                        n_eval += 1
+                        if best is None or est.throughput > best[0]:
+                            best = (est.throughput, plan, est)
         B_try //= 2
     assert best is not None, "no feasible decode plan"
     plan, est = best[1], best[2]

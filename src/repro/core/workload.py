@@ -193,6 +193,17 @@ def dense_module_bytes_per_layer(cfg: ModelConfig) -> float:
     return per
 
 
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= max(1, n) — the capacity-bucket rounding
+    shared by the planner's prefill Eq. 3 charge and the engine's grouped-
+    prefill dispatch buffer (bounded trace-key variety: one bucket per
+    doubling, not one per distinct measured load)."""
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
 # ---------------------------------------------------------------------------
 # Weight-residency policy (S_Params / S_Expert of Table 2, realized)
 # ---------------------------------------------------------------------------
@@ -222,26 +233,43 @@ def base_weight_bytes(cfg: ModelConfig) -> float:
     return total
 
 
-def stream_module_bytes(cfg: ModelConfig) -> float:
+def stream_module_bytes(cfg: ModelConfig, predict_topk: int = 0) -> float:
     """Largest per-layer streamed working set — sizes ONE slot of the
     device-side stream buffer.  The store stages a whole layer's streamed
     modules together (mixer AND FFN stage when nothing is resident), so a
     slot is charged as the worst single layer's total, not the largest
-    individual module."""
+    individual module.
+
+    ``predict_topk > 0`` models predictive per-expert streaming: only the
+    predicted expert set (k-hat experts) is staged per MoE layer instead of
+    the whole stack, and the layer's norm2/router are pinned resident by the
+    store, so an MoE layer's streamed FFN bytes shrink from
+    ``moe_layer_weight_bytes`` to ``k-hat * expert_weight_bytes``.
+    Mispredicted experts are fetched on demand through the same window and
+    are transient, so they do not grow the steady-state slot."""
     per = 0.0
     for i in range(cfg.num_layers):
-        layer = mixer_weight_bytes(cfg, cfg.layer_kind(i)) + \
-            ffn_module_weight_bytes(cfg, cfg.ffn_kind(i))
+        ffn = cfg.ffn_kind(i)
+        if ffn == "moe" and predict_topk > 0:
+            khat = min(cfg.num_experts, int(predict_topk))
+            ffn_bytes = khat * expert_weight_bytes(cfg)
+        else:
+            ffn_bytes = ffn_module_weight_bytes(cfg, ffn)
+        layer = mixer_weight_bytes(cfg, cfg.layer_kind(i)) + ffn_bytes
         per = max(per, layer)
     return per
 
 
-def stream_buffer_bytes(cfg: ModelConfig, depth: int = 2) -> float:
+def stream_buffer_bytes(
+    cfg: ModelConfig, depth: int = 2, predict_topk: int = 0
+) -> float:
     """Device bytes of the double-buffered weight-stream window (S_Expert):
     ``depth`` slots of the largest streamed module — layer l's working set
     plus layer l+1's in-flight prefetch.  The Eq. 3 sibling of
-    ``expert_buffer_bytes`` for weight streaming."""
-    return depth * stream_module_bytes(cfg)
+    ``expert_buffer_bytes`` for weight streaming.  With ``predict_topk``
+    set, a slot holds the expected predicted-expert set, not the worst
+    whole-layer stack (see ``stream_module_bytes``)."""
+    return depth * stream_module_bytes(cfg, predict_topk=predict_topk)
 
 
 @dataclass(frozen=True)
@@ -261,6 +289,9 @@ class ResidencyPlan:
     resident_bytes: float                  # realized total incl. base
     mixer_resident: tuple                  # per layer: bool
     ffn_resident: tuple                    # per layer: bool (True if no FFN)
+    spare_bytes: float = 0.0               # budget left after greedy fill;
+    #                                        the store's hot-expert LRU may
+    #                                        promote experts into these bytes
 
     @property
     def fully_resident(self) -> bool:
@@ -317,7 +348,7 @@ def plan_residency(cfg: ModelConfig, s_params: Optional[float]) -> ResidencyPlan
     for i in range(L):
         if cfg.ffn_kind(i) == "dense" and cfg.d_ff <= 0:
             ffn[i] = True
-    return ResidencyPlan(base, used, tuple(mixer), tuple(ffn))
+    return ResidencyPlan(base, used, tuple(mixer), tuple(ffn), budget)
 
 
 # ---------------------------------------------------------------------------

@@ -71,6 +71,16 @@ def main() -> None:
     ap.add_argument("--no-prefetch", action="store_true",
                     help="disable the async prefetch (streamed-serial: "
                          "fetch-on-demand, copy serialized with compute)")
+    ap.add_argument("--predict-topk", type=int, default=None,
+                    help="predictive per-expert streaming: stream only the "
+                         "k-hat experts predicted from the previous layer's "
+                         "gate tap (plus demand fetches); default follows "
+                         "the planned predict_topk; 0 forces whole-stack "
+                         "streaming; implies --stream-weights")
+    ap.add_argument("--expert-lru-gb", type=float, default=None,
+                    help="hot-expert device LRU budget (GB) for predictive "
+                         "streaming; default: the residency plan's spare "
+                         "bytes")
     ap.add_argument("--kv-page-tokens", type=int, default=0,
                     help="page the KV cache into fixed-size blocks of this "
                          "many tokens (0 = the contiguous cache); pages "
@@ -137,6 +147,7 @@ def main() -> None:
         omega=res.plan.omega if cfg.has_attention else 0.0,
         s_params=res.plan.s_params,
         s_expert=res.plan.s_expert,
+        predict_topk=res.plan.predict_topk,
     )
     # re-plan the fused chunk T at the smoke batch (the admission cadence
     # scales with B, so the full-config T would over- or under-chunk here)
@@ -150,7 +161,8 @@ def main() -> None:
     # --resident-gb implies streaming; at smoke scale the full-model
     # S_Params would pin everything, so the streamed smoke run defaults to
     # resident_bytes=0 to actually exercise the stream path
-    stream = args.stream_weights or args.resident_gb is not None
+    stream = (args.stream_weights or args.resident_gb is not None
+              or args.predict_topk is not None)
     resident_bytes = (
         0.0 if args.resident_gb is None else args.resident_gb * 1e9
     )
@@ -158,9 +170,14 @@ def main() -> None:
     if stream:
         # the ONE store every scheduler engine executes through — built
         # here so the realized split can be printed before serving
+        khat = (plan.predict_topk if args.predict_topk is None
+                else args.predict_topk)
         store = ParamStore(
             cfg, params, resident_bytes=resident_bytes,
             prefetch=not args.no_prefetch,
+            predict_topk=khat,
+            lru_bytes=(None if args.expert_lru_gb is None
+                       else args.expert_lru_gb * 1e9),
         )
         print(f"realized residency (smoke): {store.describe()}")
     if args.kv_page_tokens:
@@ -221,6 +238,24 @@ def main() -> None:
     if stream:
         print(f"weight streaming: {report.htod_gb:.3f}GB htod, "
               f"prefetch stall {report.prefetch_wait_s:.3f}s")
+    if report.expert_load is not None:
+        per_expert = report.expert_load.sum(axis=0)
+        hist = "/".join(str(int(c)) for c in per_expert)
+        print(f"routing skew: {report.routing_skew:.2f}x balanced "
+              f"(per-expert routed copies {hist})")
+        drops = "/".join(
+            str(int(d)) for d in report.expert_dropped_by_layer
+        )
+        print(f"per-MoE-layer drops: {drops} "
+              f"({report.capacity_replans} online capacity re-plans)")
+    if report.expert_pred_hits or report.expert_pred_misses \
+            or report.expert_lru_hits:
+        print(f"predictive expert streaming: "
+              f"pred hit rate {report.pred_hit_rate:.0%} "
+              f"({report.expert_pred_hits} staged / "
+              f"{report.expert_pred_misses} demand), "
+              f"LRU hit rate {report.lru_hit_rate:.0%} "
+              f"({report.expert_lru_hits} hits)")
     if args.kv_page_tokens:
         print(f"kv paging: {report.kv_htod_bytes / 1e6:.3f}MB page htod, "
               f"{report.kv_dtoh_bytes / 1e6:.3f}MB dtoh")

@@ -93,7 +93,7 @@ def grouped_dispatch(
     wg, wu, wd,             # (E, ·, ·) expert weights
     capacity: int,
     use_kernel=None,
-) -> Tuple[jax.Array, jax.Array, jax.Array]:
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """The engine's expert module (paper §4.2), fully on device.
 
     Routed token copies are gathered into an ``(E, C, D)`` capacity buffer,
@@ -101,8 +101,10 @@ def grouped_dispatch(
     Pallas on TPU, XLA einsum elsewhere), and scatter-added back weighted by
     their gates.  ``capacity`` is the per-expert token budget ``b_e``; routed
     copies beyond it are dropped (zero contribution), which the caller
-    accounts for.  Returns ``(y, kept, dropped)`` with ``kept``/``dropped``
-    device scalars — no host sync happens here.
+    accounts for.  Returns ``(y, kept, dropped, load)`` — ``kept``/
+    ``dropped`` device scalars plus ``load``, the (E,) per-expert routed-copy
+    histogram counted BEFORE capacity drops (what the planner's measured
+    ``b_e`` search consumes) — no host sync happens here.
     """
     from repro.kernels import ops as kernel_ops
 
@@ -124,7 +126,8 @@ def grouped_dispatch(
     back = back * (keep[:, None] * flat_gate[:, None]).astype(back.dtype)
     y = jnp.zeros((T, D), xt.dtype).at[tok].add(back.astype(xt.dtype))
     kept = jnp.sum(keep.astype(jnp.int32))
-    return y, kept, jnp.int32(T * k) - kept
+    load = jnp.zeros((E,), jnp.int32).at[flat_idx].add(1)
+    return y, kept, jnp.int32(T * k) - kept, load
 
 
 def moe_apply_grouped(
@@ -147,12 +150,32 @@ def moe_apply_grouped(
     xt = x.reshape(-1, D)
     gates, idx, probs = route(cfg, p["router"], xt)
     cap = capacity if capacity is not None else moe_capacity(cfg, xt.shape[0])
-    y, _, _ = grouped_dispatch(
+    y, _, _, _ = grouped_dispatch(
         cfg, xt, gates, idx,
         p["experts_w_gate"], p["experts_w_up"], p["experts_w_down"],
         cap, use_kernel=use_kernel,
     )
     return y.reshape(B, S, D).astype(x.dtype), load_balance_loss(cfg, probs, idx)
+
+
+def predict_experts(
+    cfg: ModelConfig, next_router_w: jax.Array, x: jax.Array, khat: int
+) -> jax.Array:
+    """Predict the NEXT MoE layer's active expert set from the current
+    hidden state (device-computed; (khat,) int32 ids).
+
+    Layer *l*'s post-mixer state pushed through layer *l+1*'s router is a
+    strong proxy for *l+1*'s actual routing (PAPERS.md: predictive
+    prefetching) because the residual stream changes slowly between
+    adjacent layers.  Batch-aggregated: softmax probabilities are summed
+    over tokens and the top-k-hat experts by expected load are returned —
+    the set worth moving bytes for.  Predictions steer PREFETCH only; the
+    actual routing at *l+1* fetches any mispredicted expert on demand."""
+    logits = x.astype(jnp.float32) @ next_router_w          # (..., E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    scores = probs.reshape(-1, cfg.num_experts).sum(axis=0)
+    _, ids = jax.lax.top_k(scores, min(khat, cfg.num_experts))
+    return ids.astype(jnp.int32)
 
 
 # ---------------------------------------------------------------------------

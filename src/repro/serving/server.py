@@ -111,6 +111,12 @@ class ServeConfig:
     #                                      first step from the submitted queue)
     plan: Optional[Plan] = None          # planner-produced Plan (from_plan);
     #                                      used when Server gets plan=None
+    replan_skew: Optional[float] = None  # online capacity re-plan: re-derive
+    #   b_e from the measured expert-load histogram whenever the hottest
+    #   expert's share drifts by more than this (absolute share delta);
+    #   None disables re-planning
+    replan_drop_target: float = 0.01     # expected drop-rate bound the
+    #                                      re-planned capacity is sized for
 
     def __post_init__(self) -> None:
         assert self.scheduler in ("static", "continuous"), self.scheduler
@@ -161,6 +167,10 @@ class StreamConfig:
     stream_weights: bool = False
     resident_bytes: Optional[float] = None
     prefetch: bool = True
+    predict_topk: Optional[int] = None   # per-expert predictive streaming
+    #   (None = follow the plan's predict_topk; 0 forces whole-stack)
+    lru_bytes: Optional[float] = None    # hot-expert device LRU budget
+    #   (None = the residency plan's spare bytes)
 
 
 @dataclass
@@ -203,6 +213,13 @@ class ServeReport:
     #   (full prompts on a miss, suffix only on a prefix hit — the gap vs
     #   sum(len(prompt)) is the prefill work the prefix cache skipped)
     _expert_dropped: int = 0      # drops counted outside BatchResults
+    # predictive per-expert streaming + imbalance accounting (grouped path)
+    expert_dropped_by_layer: Optional[np.ndarray] = None  # (n_moe,) drops
+    expert_load: Optional[np.ndarray] = None  # (n_moe, E) routed-copy hist
+    expert_pred_hits: int = 0     # expert was staged by the l+1 prediction
+    expert_pred_misses: int = 0   # demand-fetched (mispredicted/cold) experts
+    expert_lru_hits: int = 0      # served from the hot-expert device LRU
+    capacity_replans: int = 0     # online b_e re-plans on measured skew drift
 
     @property
     def total_s(self) -> float:
@@ -237,6 +254,35 @@ class ServeReport:
         return self._expert_dropped + sum(
             r.expert_tokens_dropped for r in self.results
         )
+
+    @property
+    def routing_skew(self) -> float:
+        """Hottest expert's measured share of routed copies (aggregated
+        over MoE layers), as a multiple of the balanced share ``1/E`` —
+        1.0 is perfectly balanced, E is fully collapsed routing.  0.0
+        when no routed copies were measured (dense model / loop path)."""
+        if self.expert_load is None:
+            return 0.0
+        per_expert = self.expert_load.sum(axis=0)
+        total = per_expert.sum()
+        if total <= 0:
+            return 0.0
+        return float(per_expert.max() / total * per_expert.size)
+
+    @property
+    def pred_hit_rate(self) -> float:
+        """Fraction of decode-stage expert fetches the l+1 prediction (or
+        the LRU) had already paid for — the htod latency actually hidden."""
+        n = self.expert_pred_hits + self.expert_pred_misses
+        return self.expert_pred_hits / n if n else 0.0
+
+    @property
+    def lru_hit_rate(self) -> float:
+        """Fraction of decode-stage expert uses served from the hot-expert
+        LRU (no copy at all), over all uses."""
+        n = (self.expert_pred_hits + self.expert_pred_misses
+             + self.expert_lru_hits)
+        return self.expert_lru_hits / n if n else 0.0
 
     @property
     def decode_throughput(self) -> float:
@@ -418,7 +464,12 @@ class Server:
         self._t0: Optional[float] = None
         self._max_seq: Optional[int] = serve.max_seq
         # engine-stat totals already drained into the report
-        self._seen = {"drop": 0, "htod": 0, "wait": 0.0, "kvh": 0, "kvd": 0}
+        self._seen = {"drop": 0, "htod": 0, "wait": 0.0, "kvh": 0, "kvd": 0,
+                      "ph": 0, "pm": 0, "lh": 0}
+        # online capacity re-plan (replan_skew): the hottest expert's share
+        # at the last (re-)plan; None until the first measurement
+        self._replan_share: Optional[float] = None
+        self._replan_ticks = 0
         # Eq. 2 admission budget (continuous): every in-flight sequence's
         # offloaded KV/state at its FULL prompt+decode extent must fit
         # m_c - S_Model, so a sequence can never outgrow the host mid-decode
@@ -519,6 +570,7 @@ class Server:
                 self.cfg, self.params, self.plan,
                 stream_weights=st.stream_weights,
                 resident_bytes=st.resident_bytes, prefetch=st.prefetch,
+                predict_topk=st.predict_topk, lru_bytes=st.lru_bytes,
             )
         if self.serve.max_batch is not None:
             # planner-sized up front (ServeConfig.from_plan): the engine
@@ -569,12 +621,61 @@ class Server:
         self.report.prefetch_wait_s += st.prefetch_wait_s - self._seen["wait"]
         self.report.kv_htod_bytes += st.kv_htod_bytes - self._seen["kvh"]
         self.report.kv_dtoh_bytes += st.kv_dtoh_bytes - self._seen["kvd"]
+        self.report.expert_pred_hits += st.expert_pred_hits - self._seen["ph"]
+        self.report.expert_pred_misses += (st.expert_pred_misses
+                                           - self._seen["pm"])
+        self.report.expert_lru_hits += st.expert_lru_hits - self._seen["lh"]
+        # cumulative engine totals — one engine per server, so the report's
+        # arrays are simply the latest snapshot (copies: the engine keeps
+        # accumulating into its own buffers)
+        if st.expert_tokens_dropped_by_layer is not None:
+            self.report.expert_dropped_by_layer = (
+                st.expert_tokens_dropped_by_layer.copy()
+            )
+            self.report.expert_load = st.expert_load.copy()
         self._seen = {"drop": st.expert_tokens_dropped,
                       "htod": st.weight_htod_bytes,
                       "wait": st.prefetch_wait_s,
                       "kvh": st.kv_htod_bytes,
-                      "kvd": st.kv_dtoh_bytes}
+                      "kvd": st.kv_dtoh_bytes,
+                      "ph": st.expert_pred_hits,
+                      "pm": st.expert_pred_misses,
+                      "lh": st.expert_lru_hits}
         return d_drop
+
+    def _maybe_replan(self) -> None:
+        """Online imbalance-aware capacity re-plan: when the hottest
+        expert's measured share has drifted more than ``replan_skew`` since
+        the last (re-)plan, re-derive ``b_e`` from the measured per-expert
+        load via ``planner.capacity_for_load`` and push it into the engine
+        (``set_expert_capacity`` — the next dispatch retraces once).
+        Checked every 8 decode steps to keep the host sync off the
+        every-tick path."""
+        self._replan_ticks += 1
+        if self._replan_ticks % 8:
+            return
+        self.report._expert_dropped += self._drain_engine_stats()
+        if self.report.expert_load is None:
+            return
+        per_expert = self.report.expert_load.sum(axis=0)
+        total = per_expert.sum()
+        if total <= 0:
+            return
+        share = float(per_expert.max() / total)
+        if self._replan_share is None:
+            self._replan_share = share       # baseline, no re-plan yet
+            return
+        if abs(share - self._replan_share) <= self.serve.replan_skew:
+            return
+        from repro.core.planner import capacity_for_load
+
+        b_e = capacity_for_load(
+            per_expert, self._b, self.cfg.experts_per_token,
+            max_drop_rate=self.serve.replan_drop_target,
+        )
+        self._engine.set_expert_capacity(b_e)
+        self._replan_share = share
+        self.report.capacity_replans += 1
 
     # -- the step-driven core ---------------------------------------------
     def _any_live(self) -> bool:
@@ -598,6 +699,8 @@ class Server:
         self._admit()
         if self._any_live():
             self._decode_tick(self._chunk_T())
+            if self.serve.replan_skew is not None:
+                self._maybe_replan()
         return self.has_work()
 
     def run(self, until_idle: bool = True) -> ServeReport:

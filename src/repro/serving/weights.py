@@ -28,9 +28,11 @@ into ``EngineStats`` and the scheduler surfaces as ``ServeReport.htod_gb``
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Optional, Tuple
+from collections import OrderedDict
+from typing import Dict, Iterable, List, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.analysis import runtime as sanitizer
@@ -78,10 +80,19 @@ class StreamWindow:
     blocking on it.  ``fetch(key) -> (value, nbytes)`` must return the
     device-side value plus the bytes it moved; copies are issued at
     prefetch/fetch time, so ``htod_bytes`` counts issue-side traffic.
+
+    ``tag`` names the planned-transfer scope every copy through this window
+    is issued under, so the runtime sanitizer can attribute traffic per
+    stream (``stream-window`` for whole-module staging, ``expert-prefetch``
+    for the predictive per-expert window).
     """
 
-    def __init__(self, fetch, depth: int = 2, enabled: bool = True) -> None:
+    def __init__(
+        self, fetch, depth: int = 2, enabled: bool = True,
+        tag: str = "stream-window",
+    ) -> None:
         self._fetch = fetch
+        self.tag = tag
         self.depth = max(1, depth)
         self.enabled = enabled
         self.inflight: Dict = {}
@@ -99,7 +110,7 @@ class StreamWindow:
         while len(self._order) >= self.depth:
             oldest = self._order.pop(0)
             self.inflight.pop(oldest, None)
-        with sanitizer.allowed("stream-window"):
+        with sanitizer.allowed(self.tag):
             value, nbytes = self._fetch(key)
         self.inflight[key] = value
         self._order.append(key)
@@ -114,7 +125,7 @@ class StreamWindow:
             value = self.inflight.pop(key)
             self._order.remove(key)
         else:
-            with sanitizer.allowed("stream-window"):
+            with sanitizer.allowed(self.tag):
                 value, nbytes = self._fetch(key)
             self.htod_bytes += nbytes
             self.demand += 1
@@ -143,6 +154,19 @@ class ParamStore:
     async htod copy of layer *l*'s streamed modules into the in-flight
     window ahead of use.  ``prefetch=False`` fetches on demand at
     ``acquire`` — the serialized copy->compute baseline.
+
+    ``predict_topk > 0`` switches streamed MoE layers to PREDICTIVE
+    PER-EXPERT streaming: the expert stacks are split into per-expert host
+    handles served through a second ``StreamWindow`` (planned-transfer tag
+    ``expert-prefetch``), while the layer's norm2 + router — tiny, and the
+    router is needed on device to predict the NEXT layer's expert set —
+    stay pinned.  ``prefetch_experts(l+1, predicted)`` stages only the
+    predicted set; ``acquire_experts(l, used)`` assembles the grouped-GEMM
+    stacks from the in-flight set, the hot-expert LRU, and on-demand
+    fetches for mispredictions — prediction moves WHEN bytes move, never
+    WHICH math runs.  ``lru_bytes`` (default: the residency plan's spare
+    bytes) bounds a device-side hot-expert LRU: every expert use promotes
+    its weights; cold experts are demoted when the byte budget overflows.
     """
 
     def __init__(
@@ -152,11 +176,17 @@ class ParamStore:
         resident_bytes: Optional[float] = None,
         prefetch: bool = True,
         prefetch_depth: int = 2,
+        predict_topk: int = 0,
+        lru_bytes: Optional[float] = None,
     ) -> None:
         self.cfg = cfg
         self.prefetch_enabled = prefetch
         self.prefetch_depth = max(1, prefetch_depth)
         self.residency = W.plan_residency(cfg, resident_bytes)
+        self.predict_topk = (
+            max(0, min(cfg.num_experts, int(predict_topk)))
+            if cfg.has_moe else 0
+        )
         layers = unstack_layers(cfg, params)
         self.schema: List[Tuple[str, str]] = [(k, f) for k, f, _ in layers]
         # base params: always device-resident (embed / final_norm / lm_head)
@@ -166,6 +196,11 @@ class ParamStore:
         # per-layer split into resident (device) and streamed (host) modules
         self._resident: List[Dict[str, Dict]] = []
         self._host: List[Dict[str, Dict]] = []
+        # predictive split of streamed MoE layers: norm2 + router pinned
+        # device-side (keyed by layer), expert stacks host-side as
+        # per-expert slices (numpy views — zero-copy)
+        self._moe_shared: Dict[int, Dict] = {}
+        self._experts_host: Dict[int, Dict[str, np.ndarray]] = {}
         for li, (kind, ffn, slot) in enumerate(layers):
             mixer = {k: v for k, v in slot.items() if k in _MIXER_KEYS}
             ffnp = {k: v for k, v in slot.items() if k in _FFN_KEYS}
@@ -178,6 +213,16 @@ class ParamStore:
             if ffnp:
                 if self.residency.ffn_resident[li]:
                     res["ffn"] = ffnp
+                elif self.predict_topk > 0 and ffn == "moe":
+                    self._moe_shared[li] = {
+                        "norm2": jax.device_put(ffnp["norm2"]),
+                        "router": jax.device_put(ffnp["moe"]["router"]),
+                    }
+                    self._experts_host[li] = {
+                        k: np.asarray(ffnp["moe"][k])
+                        for k in ("experts_w_gate", "experts_w_up",
+                                  "experts_w_down")
+                    }
                 else:
                     host["ffn"] = _to_host(ffnp)
             self._resident.append(res)
@@ -188,6 +233,39 @@ class ParamStore:
         self._window = StreamWindow(
             self._fetch, depth=self.prefetch_depth, enabled=True
         )
+        # predictive per-expert window: keys are (layer, expert).  Depth
+        # covers two layers' worth of whole stacks so prefill's all-expert
+        # staging and back-to-back predicted sets never thrash each other.
+        self._expert_window = StreamWindow(
+            self._fetch_expert,
+            depth=2 * max(1, cfg.num_experts),
+            enabled=True,
+            tag="expert-prefetch",
+        )
+        # hot-expert LRU: (layer, expert) -> (device tree, nbytes).  Usage
+        # promotes (move-to-end); overflow demotes the coldest entry.  The
+        # byte budget defaults to whatever the greedy residency fill left
+        # unused — bytes the planner already reserved for weights.
+        self._lru: "OrderedDict[Tuple[int, int], Tuple[Tuple, int]]" = (
+            OrderedDict()
+        )
+        self.lru_bytes = float(
+            self.residency.spare_bytes if lru_bytes is None else lru_bytes
+        )
+        self._lru_used = 0
+        self._expert_counters = {
+            "pred_hits": 0, "pred_misses": 0, "lru_hits": 0,
+        }
+        # zeros filler for experts with no routed tokens this step: an
+        # unrouted expert's grouped-GEMM rows are all-zero inputs whose
+        # outputs are never gathered back, so substituting zero weights is
+        # bit-identical (zeros — NOT uninitialized memory — so no NaNs
+        # propagate through the masked-out rows).  Built EAGERLY: the first
+        # acquire_experts happens inside a decode region where allocating
+        # would trip the transfer guard.
+        self._zero_expert: Optional[Tuple] = None
+        if self._experts_host:
+            self._zeros_expert()
 
     @classmethod
     def build(
@@ -198,15 +276,26 @@ class ParamStore:
         stream_weights: bool = False,
         resident_bytes: Optional[float] = None,
         prefetch: bool = True,
+        predict_topk: Optional[int] = None,
+        lru_bytes: Optional[float] = None,
     ) -> "ParamStore":
         """THE budget-resolution policy, shared by the engine constructor
         and the scheduler: everything resident unless ``stream_weights``;
         the budget is the plan's ``s_params`` unless ``resident_bytes``
-        overrides it."""
+        overrides it.  Predictive per-expert streaming follows the plan's
+        ``predict_topk`` unless overridden."""
         budget = None
+        khat = 0
         if stream_weights:
             budget = plan.s_params if resident_bytes is None else resident_bytes
-        return cls(cfg, params, resident_bytes=budget, prefetch=prefetch)
+            khat = (
+                getattr(plan, "predict_topk", 0)
+                if predict_topk is None else predict_topk
+            )
+        return cls(
+            cfg, params, resident_bytes=budget, prefetch=prefetch,
+            predict_topk=khat, lru_bytes=lru_bytes,
+        )
 
     # -- residency inspection -------------------------------------------
     @property
@@ -216,7 +305,7 @@ class ParamStore:
         needs every layer's weights alive on device at once; streamed layers
         keep the per-layer dispatch loop so the htod prefetch has a layer
         boundary to hide behind)."""
-        return all(not h for h in self._host)
+        return all(not h for h in self._host) and not self._experts_host
 
     def fused_layer_params(self) -> Tuple[Dict, ...]:
         """Per-layer merged param dicts for the fused decode macro-step.
@@ -228,20 +317,31 @@ class ParamStore:
         return tuple(self.acquire(li) for li in range(len(self.schema)))
 
     def resident_module_bytes(self) -> int:
-        return _tree_bytes(self.base) + sum(
-            _tree_bytes(m) for res in self._resident for m in res.values()
+        return (
+            _tree_bytes(self.base)
+            + sum(_tree_bytes(m) for res in self._resident
+                  for m in res.values())
+            + sum(_tree_bytes(m) for m in self._moe_shared.values())
         )
 
     def streamed_module_bytes(self) -> int:
-        return sum(_tree_bytes(m) for h in self._host for m in h.values())
+        return (
+            sum(_tree_bytes(m) for h in self._host for m in h.values())
+            + sum(_tree_bytes(m) for m in self._experts_host.values())
+        )
 
     def describe(self) -> str:
+        pred = (
+            f", predict_topk={self.predict_topk}, "
+            f"lru={self.lru_bytes / 1e9:.3f}GB"
+            if self.predict_topk > 0 else ""
+        )
         return (
             f"resident {self.resident_module_bytes() / 1e9:.3f}GB "
             f"(+{self.residency.n_streamed()} streamed modules, "
             f"{self.streamed_module_bytes() / 1e9:.3f}GB host-side, "
             f"window={self.prefetch_depth}, "
-            f"prefetch={'on' if self.prefetch_enabled else 'off'})"
+            f"prefetch={'on' if self.prefetch_enabled else 'off'}{pred})"
         )
 
     # -- streaming -------------------------------------------------------
@@ -252,19 +352,19 @@ class ParamStore:
 
     @property
     def htod_bytes(self) -> int:
-        return self._window.htod_bytes
+        return self._window.htod_bytes + self._expert_window.htod_bytes
 
     @property
     def prefetch_wait_s(self) -> float:
-        return self._window.wait_s
+        return self._window.wait_s + self._expert_window.wait_s
 
     @property
     def prefetch_issued(self) -> int:
-        return self._window.issued
+        return self._window.issued + self._expert_window.issued
 
     @property
     def demand_fetches(self) -> int:
-        return self._window.demand
+        return self._window.demand + self._expert_window.demand
 
     def _fetch(self, li: int) -> Tuple[Dict[str, Dict], int]:
         """Issue the async htod copy of layer ``li``'s streamed modules."""
@@ -286,19 +386,160 @@ class ParamStore:
             return
         self._window.prefetch(li)
 
-    def acquire(self, li: int) -> Dict:
+    def acquire(self, li: int, experts: bool = True) -> Dict:
         """Return layer ``li``'s full param dict with streamed modules on
         device, consuming the in-flight prefetch (or fetching on demand).
         The time spent waiting on the transfer — ideally ~0 when prefetch
-        overlapped it with compute — is accounted in ``prefetch_wait_s``."""
+        overlapped it with compute — is accounted in ``prefetch_wait_s``.
+
+        For predictive-streamed MoE layers, ``experts=False`` returns only
+        the mixer + pinned norm2/router — the decode hot path assembles the
+        expert stacks itself via ``acquire_experts`` after reading back the
+        routed set.  ``experts=True`` (prefill, loop oracle) assembles the
+        FULL expert stack, bit-identical to whole-stack streaming."""
         merged: Dict = {}
         for tree in self._resident[li].values():
             merged.update(tree)
         if self._host[li]:
             for tree in self._window.acquire(li).values():
                 merged.update(tree)
+        if li in self._moe_shared:
+            shared = self._moe_shared[li]
+            merged["norm2"] = shared["norm2"]
+            moe: Dict = {"router": shared["router"]}
+            if experts:
+                wg, wu, wd = self.acquire_experts(
+                    li, range(self.cfg.num_experts), record=False
+                )
+                moe["experts_w_gate"] = wg
+                moe["experts_w_up"] = wu
+                moe["experts_w_down"] = wd
+            merged["moe"] = moe
         return merged
 
+    # -- predictive per-expert streaming --------------------------------
+    def streams_experts(self, li: int) -> bool:
+        """True when layer ``li``'s expert stacks stream per-expert (the
+        predictive decode stage applies)."""
+        return li % len(self.schema) in self._experts_host
+
+    def moe_shared(self, li: int) -> Dict:
+        """Device-pinned norm2 + router of a predictive-streamed MoE layer
+        — the router is what lets layer *l* predict layer *l+1*'s experts
+        without waiting for *l+1*'s weights."""
+        return self._moe_shared[li % len(self.schema)]
+
+    def _fetch_expert(self, key: Tuple[int, int]) -> Tuple[Tuple, int]:
+        """Issue the async htod copy of ONE expert's weight slices."""
+        li, e = key
+        host = self._experts_host[li]
+        tree = tuple(
+            jax.device_put(host[k][e])
+            for k in ("experts_w_gate", "experts_w_up", "experts_w_down")
+        )
+        return tree, _tree_bytes(tree)
+
+    def _zeros_expert(self) -> Tuple:
+        """Cached zero-weight filler for experts with no routed tokens.
+        Zero weights are exact for unrouted experts (their buffer rows are
+        never gathered back) and, unlike uninitialized memory, cannot leak
+        NaNs through the masked scatter."""
+        if self._zero_expert is None:
+            host = next(iter(self._experts_host.values()))
+            self._zero_expert = tuple(
+                jnp.zeros(host[k].shape[1:], dtype=host[k].dtype)
+                for k in ("experts_w_gate", "experts_w_up", "experts_w_down")
+            )
+        return self._zero_expert
+
+    def _lru_get(self, key: Tuple[int, int]) -> Optional[Tuple]:
+        hit = self._lru.get(key)
+        if hit is None:
+            return None
+        self._lru.move_to_end(key)
+        return hit[0]
+
+    def _lru_put(self, key: Tuple[int, int], tree: Tuple, nbytes: int) -> None:
+        """Promote a just-used expert into the hot-expert LRU; demote the
+        coldest entries past the byte budget.  Promotion on every use makes
+        residency track measured routing frequency: hot experts stay, cold
+        ones age out."""
+        if nbytes > self.lru_bytes:
+            return
+        if key in self._lru:
+            self._lru.move_to_end(key)
+            return
+        self._lru[key] = (tree, nbytes)
+        self._lru_used += nbytes
+        while self._lru_used > self.lru_bytes and self._lru:
+            _, (_, old_bytes) = self._lru.popitem(last=False)
+            self._lru_used -= old_bytes
+
+    def prefetch_experts(self, li: int, expert_ids: Iterable[int]) -> None:
+        """Stage the PREDICTED expert set for layer ``li`` into the
+        expert window (async).  Experts already hot in the LRU skip the
+        copy entirely — that is the LRU paying for itself."""
+        if not self.prefetch_enabled:
+            return
+        li = li % len(self.schema)
+        if li not in self._experts_host:
+            return
+        E = self.cfg.num_experts
+        for e in expert_ids:
+            e = int(e)
+            if not 0 <= e < E or (li, e) in self._lru:
+                continue
+            self._expert_window.prefetch((li, e))
+
+    def acquire_experts(
+        self, li: int, expert_ids: Iterable[int], record: bool = True
+    ) -> Tuple:
+        """Assemble layer ``li``'s grouped-GEMM weight stacks (E, ...) with
+        true weights for ``expert_ids`` and the zeros filler elsewhere.
+
+        Source order per expert: hot-expert LRU -> in-flight predicted
+        prefetch -> on-demand fetch (the guaranteed-correct misprediction
+        fallback).  ``record=True`` (the decode stage) counts
+        prediction/LRU hit accounting; prefill's all-expert assembly passes
+        ``record=False`` so it cannot dilute the decode hit rate."""
+        li = li % len(self.schema)
+        want = {int(e) for e in expert_ids}
+        zeros = self._zeros_expert()
+        cols: List[Tuple] = []
+        for e in range(self.cfg.num_experts):
+            if e not in want:
+                cols.append(zeros)
+                continue
+            key = (li, e)
+            tree = self._lru_get(key)
+            if tree is not None:
+                if record:
+                    self._expert_counters["lru_hits"] += 1
+                cols.append(tree)
+                continue
+            staged = key in self._expert_window.inflight
+            if record:
+                which = "pred_hits" if staged else "pred_misses"
+                self._expert_counters[which] += 1
+            tree = self._expert_window.acquire(key)
+            self._lru_put(key, tree, _tree_bytes(tree))
+            cols.append(tree)
+        return tuple(jnp.stack([c[i] for c in cols]) for i in range(3))
+
     def take_counters(self) -> Tuple[int, float]:
-        """Drain (htod_bytes, prefetch_wait_s) since the last call."""
-        return self._window.take_counters()
+        """Drain (htod_bytes, prefetch_wait_s) since the last call —
+        summed over the whole-module and per-expert windows."""
+        b1, w1 = self._window.take_counters()
+        b2, w2 = self._expert_window.take_counters()
+        return b1 + b2, w1 + w2
+
+    def take_expert_counters(self) -> Dict[str, int]:
+        """Drain predictive-streaming hit counters since the last call:
+        ``pred_hits`` (expert was staged by prediction), ``pred_misses``
+        (demand-fetched mispredictions/cold starts), ``lru_hits`` (served
+        from the hot-expert LRU, no copy at all)."""
+        out = dict(self._expert_counters)
+        out["lru_bytes_used"] = int(self._lru_used)
+        for k in self._expert_counters:
+            self._expert_counters[k] = 0
+        return out

@@ -121,7 +121,7 @@ def test_grouped_dispatch_drop_accounting_exact():
     xt = (jax.random.normal(KEY, (32, cfg.d_model)) * 0.3).astype(jnp.bfloat16)
     gates, idx, _ = moe_mod.route(cfg, p["router"], xt)
     for cap in (1, 4, 32):
-        y, kept, dropped = moe_mod.grouped_dispatch(
+        y, kept, dropped, load = moe_mod.grouped_dispatch(
             cfg, xt, gates, idx,
             p["experts_w_gate"], p["experts_w_up"], p["experts_w_down"], cap,
         )
@@ -129,6 +129,9 @@ def test_grouped_dispatch_drop_accounting_exact():
         assert int(kept) + int(dropped) == 32 * cfg.experts_per_token
         # per-expert kept count can never exceed the capacity
         assert int(kept) <= cap * cfg.num_experts
+        # the routed-load histogram counts every copy, PRE-capacity
+        assert load.shape == (cfg.num_experts,)
+        assert int(load.sum()) == 32 * cfg.experts_per_token
 
 
 def test_grouped_dispatch_rejected_on_mesh():

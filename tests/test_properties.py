@@ -411,3 +411,74 @@ def test_mixed_sampled_batch_leaves_greedy_slots_identical(sampled, seed):
                                    mixed.request_results)):
         if not sampled[i]:
             assert np.array_equal(a.tokens, b.tokens), i
+
+
+# ---------------------------------------------------------------------------
+# Predictive per-expert streaming: identity across the prediction seam
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=1)
+def _predictive_fixture():
+    """Skewed-router MoE model + the fully-resident reference tokens, one
+    per scheduler mode (nothing drawn feeds these, so once per session)."""
+    from repro.data.datasets import DatasetSpec, synthetic_requests
+    from repro.serving.scheduler import serve_dataset
+
+    cfg = get_config("mixtral-8x7b", smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    # bias every router toward experts {0,1}: the imbalanced regime where
+    # prediction and the hot-expert LRU actually have something to exploit
+    for slot in params["layers"]:
+        if "moe" in slot:
+            r = np.asarray(slot["moe"]["router"]).copy()
+            r[..., [0, 1]] += 4.0 * float(np.abs(r).mean() + 1e-6)
+            slot["moe"]["router"] = jnp.asarray(r)
+    plan = Plan(B=4, b_a=2, b_e=8, omega=0.0)
+    make = lambda: synthetic_requests(DatasetSpec("pp", 4, 8, 4),
+                                      cfg.vocab_size,
+                                      prompt_lens=[8, 6, 7, 5])
+    base = {
+        sched: serve_dataset(cfg, params, make(), plan, 4, scheduler=sched)
+        for sched in ("static", "continuous")
+    }
+    return cfg, params, plan, make, base
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    khat=st.integers(1, 4),
+    mode=st.sampled_from(["router", "constant", "random", "empty"]),
+    lru=st.sampled_from([0.0, 1e9]),
+    sched=st.sampled_from(["static", "continuous"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_predictive_streaming_token_identical(khat, mode, lru, sched, seed):
+    """Predictive per-expert streaming NEVER changes tokens: for any
+    predictor accuracy (the learned gate tap, a constant guess, random
+    ids, or no prefetch at all), any k-hat, any LRU budget, and either
+    scheduler, the served tokens equal the fully-resident reference.
+    Prediction moves WHEN bytes move, never WHICH math runs."""
+    from repro.serving.server import Server, ServeConfig, StreamConfig
+    from repro.serving.weights import ParamStore
+
+    cfg, params, plan, make, base = _predictive_fixture()
+    store = ParamStore(cfg, params, resident_bytes=0.0, predict_topk=khat,
+                       lru_bytes=lru)
+    server = Server(cfg, params, plan,
+                    serve=ServeConfig(scheduler=sched, decode_len=4),
+                    store=store)
+    for r in make():
+        server.submit(r)
+    server._ensure_engine()
+    if mode == "constant":
+        server._engine.predictor = lambda nli, k: [0]
+    elif mode == "random":
+        rng = np.random.default_rng(seed)
+        server._engine.predictor = (
+            lambda nli, k: rng.integers(0, cfg.num_experts, k).tolist())
+    elif mode == "empty":
+        server._engine.predictor = lambda nli, k: []
+    while server.step():
+        pass
+    rep = server.finalize()
+    for a, b in zip(base[sched].request_results, rep.request_results):
+        assert np.array_equal(a.tokens, b.tokens)

@@ -203,7 +203,11 @@ def test_planned_residency_is_realizable():
     if plan.s_params >= mb:
         assert plan.s_expert == 0.0
     else:
-        assert plan.s_expert == pytest.approx(W.stream_buffer_bytes(cfg, 2))
+        # the window is sized for the plan's own streaming granularity:
+        # whole-stack (predict_topk=0) or the predicted per-expert set
+        assert plan.s_expert == pytest.approx(
+            W.stream_buffer_bytes(cfg, 2, predict_topk=plan.predict_topk)
+        )
         rp = W.plan_residency(cfg, plan.s_params)
         assert rp.resident_bytes == pytest.approx(plan.s_params)
         assert rp.n_streamed() > 0
