@@ -15,8 +15,9 @@ import json
 
 
 def main() -> None:
-    from benchmarks import (engine_walltime, expert_prefetch, kernels,
-                            kv_paging, paper_tables)
+    from benchmarks import (engine_walltime, expert_parallel,
+                            expert_prefetch, kernels, kv_paging,
+                            paper_tables)
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("only", nargs="?", default=None,
@@ -27,7 +28,7 @@ def main() -> None:
 
     suites = (list(paper_tables.ALL) + list(engine_walltime.ALL)
               + list(kernels.ALL) + list(kv_paging.ALL)
-              + list(expert_prefetch.ALL))
+              + list(expert_prefetch.ALL) + list(expert_parallel.ALL))
     csv = []
     tables = []
     for fn in suites:

@@ -9,7 +9,7 @@ Three layers (see ``analysis/README.md`` for the rule catalogue):
   for every ``register_jit(donated=...)`` launch, plus the debug-mode
   stale-buffer poisoner;
 * AST lint — ``python -m repro.analysis.lint src/repro`` (rules
-  MG101–MG106, stdlib-only, blocking in CI).
+  MG101–MG107, stdlib-only, blocking in CI).
 """
 from repro.analysis.donation import DonationCheck, check_donation
 from repro.analysis.markers import hot_path, is_hot_path

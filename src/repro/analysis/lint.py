@@ -26,6 +26,10 @@ contracts carry a contract -> rule-ID table):
            weight/KV traffic flows through the accounted window.
     MG106  an allowlist comment without a justification: every
            suppression must say WHY the line is exempt.
+    MG107  a collective (``all_to_all`` / ``psum`` / ``all_gather`` / ...)
+           in ``repro.distributed`` outside a ``@register_jit`` module —
+           every mesh collective must live in a named, registry-tracked
+           jitted module so the retrace ledger and the sanitizer see it.
 
 Allowlist syntax — on the FIRST line of the flagged statement:
 
@@ -51,6 +55,7 @@ RULES: Dict[str, str] = {
     "MG104": "jitted dynamic_update_slice writer without donate_argnames",
     "MG105": "jax.device_put outside the planned StreamWindow modules",
     "MG106": "lint allowlist entry without a justification",
+    "MG107": "collective in repro.distributed outside a register_jit module",
 }
 
 HOT_PATH_NAMES = {"hot_path"}
@@ -58,6 +63,10 @@ HOST_SYNC_METHODS = {"item", "tolist", "block_until_ready"}
 HOST_SYNC_NP_FUNCS = {"asarray", "array"}
 # modules whose jax.device_put IS the planned transfer window
 DEVICE_PUT_OK = ("serving/weights.py", "serving/cache.py")
+# mesh collectives that MG107 requires inside @register_jit modules
+COLLECTIVE_NAMES = {"all_to_all", "psum", "pmean", "all_gather", "ppermute",
+                    "psum_scatter", "pmax", "pmin"}
+REGISTER_JIT_NAMES = {"register_jit"}
 # names conventionally bound to frozen config dataclasses
 # (ModelConfig / Plan / ServeConfig / StreamConfig / CacheConfig /
 #  SamplingParams / HardwareProfile)
@@ -153,6 +162,7 @@ class _Checker(ast.NodeVisitor):
         self.relpath = relpath.replace("\\", "/")
         self.findings: List[Finding] = []
         self._hot_depth = 0
+        self._reg_jit_depth = 0
         self._scope: List[str] = []
 
     def _flag(self, node: ast.AST, rule: str, message: str) -> None:
@@ -163,11 +173,17 @@ class _Checker(ast.NodeVisitor):
     # -- function scope tracking ---------------------------------------
     def _visit_function(self, node) -> None:
         hot = _is_hot_path(node)
+        # MG107 scope: a function decorated @register_jit(...) — nested
+        # bodies (e.g. the shard_map closure) inherit the registered scope
+        reg = any(name.split(".")[-1] in REGISTER_JIT_NAMES
+                  for name in _decorator_names(node))
         self._check_mg104(node)
         self._hot_depth += 1 if hot else 0
+        self._reg_jit_depth += 1 if reg else 0
         self._scope.append(node.name)
         self.generic_visit(node)
         self._scope.pop()
+        self._reg_jit_depth -= 1 if reg else 0
         self._hot_depth -= 1 if hot else 0
 
     visit_FunctionDef = _visit_function
@@ -221,6 +237,19 @@ class _Checker(ast.NodeVisitor):
                 self._flag(node, "MG101",
                            "float(...) on a device value inside a "
                            "@hot_path function forces a blocking readback")
+        # MG107: collectives in repro.distributed must sit (lexically)
+        # inside a @register_jit module so retrace/sanitizer ledgers see
+        # them — a bare lax.psum in helper code escapes both
+        if (self.relpath.startswith("distributed/")
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in COLLECTIVE_NAMES
+                and self._reg_jit_depth == 0):
+            self._flag(
+                node, "MG107",
+                f"collective '{node.func.attr}' outside a @register_jit "
+                "module — mesh collectives must live in registry-tracked "
+                "jitted modules",
+            )
         # MG103: object.__setattr__ outside construction scopes
         if (name == "object.__setattr__"
                 and not (self._scope
@@ -348,7 +377,7 @@ def lint_paths(paths: Sequence[str]) -> List[Finding]:
 def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis.lint",
-        description="Standing-contract AST lint (rules MG101-MG106).",
+        description="Standing-contract AST lint (rules MG101-MG107).",
     )
     ap.add_argument("paths", nargs="+", help="files or directories to lint")
     args = ap.parse_args(argv)

@@ -15,7 +15,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
-CHANNELS = ("gpu", "cpu", "htod", "dtoh")
+CHANNELS = ("gpu", "cpu", "htod", "dtoh", "comm")
 
 
 @dataclass

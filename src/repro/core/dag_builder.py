@@ -8,7 +8,7 @@ census — matching the paper's per-layer DAG with P-D disaggregation
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.core import workload as W
@@ -50,6 +50,12 @@ class Plan:
     #                             slot and the expected expert htod per layer;
     #                             mispredictions demand-fetch, so correctness
     #                             never depends on it
+    ep_chunks: int = 1          # expert-parallel pipeline chunks: the decode
+    #                             batch splits into this many independent
+    #                             all-to-all+FFN stages so chunk k+1's
+    #                             dispatch overlaps chunk k's expert GEMMs
+    #                             (distributed.ep_engine; 1 = serial a2a).
+    #                             Purely a schedule knob — tokens identical
 
     def describe(self) -> str:
         out = (
@@ -63,6 +69,8 @@ class Plan:
                     f"x{self.kv_device_pages}dev")
         if self.predict_topk:
             out += f" pred_k={self.predict_topk}"
+        if self.ep_chunks > 1:
+            out += f" ep_chunks={self.ep_chunks}"
         return out
 
 
@@ -122,10 +130,16 @@ def build_decode_layer_dag(
     ctx: int,
     kind: str,
     ffn: str,
+    mesh_shape: Optional[Tuple[int, int]] = None,
 ) -> JobDag:
     dag = JobDag()
     B = plan.B
     miss = _miss_fractions(cfg, plan)
+    # expert-parallel mesh (dp, ep): one replica's DAG with experts sharded
+    # E/ep per rank — ranks run their local experts concurrently, so the
+    # gpu channel only serializes ONE rank's expert share, and an a2a
+    # exchange precedes the expert GEMMs (distributed.ep_engine)
+    ep = max(1, mesh_shape[1]) if mesh_shape else 1
 
     # ---- sequence mixer ----
     if kind == "attn":
@@ -248,7 +262,23 @@ def build_decode_layer_dag(
         # scales by k-hat/E instead of each expert paying its full miss
         if plan.predict_topk and cfg.num_experts:
             e_bytes *= min(1.0, plan.predict_topk / cfg.num_experts)
-        for e in range(cfg.num_experts):
+        ffn_deps = [router]
+        e_local = cfg.num_experts
+        if ep > 1:
+            # dispatch + return all-to-all: total payload matches
+            # distributed.a2a_bytes_per_stage (copies x ranks x (2 rows of
+            # activations + routing meta)); with ep_chunks pipeline chunks
+            # only the first chunk's exchange is exposed — the rest overlap
+            # the previous chunk's expert GEMMs — but every extra chunk
+            # pays its own dispatch launch on the critical path
+            copies = B * cfg.experts_per_token
+            a2a_total = copies * ep * (2 * cfg.d_model * 4 + 4)
+            chunks = max(1, plan.ep_chunks)
+            exposed = (hw.a2a_time(a2a_total / chunks, ep)
+                       + (chunks - 1) * hw.launch_overhead_s)
+            ffn_deps.append(dag.add("moe_a2a", "comm", exposed, deps=[router]))
+            e_local = max(1, cfg.num_experts // ep)
+        for e in range(e_local):
             cp = dag.add(f"expert_w[{e}]", "htod", e_bytes / hw.htod_bw)
             dag.add(
                 f"expert[{e}]",
@@ -259,7 +289,7 @@ def build_decode_layer_dag(
                     rows * 2 * cfg.d_model * W.BYTES,
                     int(max(rows, 1)),
                 ),
-                deps=[cp, router],
+                deps=[cp] + ffn_deps,
             )
     elif cfg.d_ff > 0:
         w_bytes = W.dense_ffn_weight_bytes(cfg) * miss["dense"]
@@ -391,14 +421,16 @@ def _layer_types(cfg: ModelConfig) -> Dict[Tuple[str, str], int]:
 
 
 def estimate_decode(
-    cfg: ModelConfig, hw: HardwareProfile, plan: Plan, ctx: int
+    cfg: ModelConfig, hw: HardwareProfile, plan: Plan, ctx: int,
+    mesh_shape: Optional[Tuple[int, int]] = None,
 ) -> PhaseEstimate:
     t_model = 0.0
     htod = dtoh = 0.0
     layer_times: Dict[str, float] = {}
     critical: List[str] = []
     for (kind, ffn), count in _layer_types(cfg).items():
-        dag = build_decode_layer_dag(cfg, hw, plan, ctx, kind, ffn)
+        dag = build_decode_layer_dag(cfg, hw, plan, ctx, kind, ffn,
+                                     mesh_shape=mesh_shape)
         t = dag.earliest_finish()
         layer_times[f"{kind}+{ffn}"] = t
         t_model += t * count

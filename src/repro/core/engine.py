@@ -665,6 +665,10 @@ class EngineStats:
     expert_pred_misses: int = 0          # routed experts demand-fetched
     expert_lru_hits: int = 0             # routed experts served from the LRU
     expert_lru_bytes: int = 0            # device bytes the hot-expert LRU pins
+    a2a_bytes: int = 0                   # interconnect bytes the mesh MoE
+    #                                      stage exchanged (a2a dispatch +
+    #                                      return; 0 off-mesh / psum path)
+    collective_dispatches: int = 0       # mesh MoE stage launches (a2a/psum)
 
 
 class ModuleBatchingEngine:
@@ -720,6 +724,9 @@ class ModuleBatchingEngine:
         prefetch: bool = True,
         fused_decode: bool = True,
         cache_config=None,
+        sctx: Optional[ShardCtx] = None,
+        ep_chunks: int = 1,
+        ep_serial: bool = False,
     ) -> None:
         assert expert_path in ("grouped", "loop"), expert_path
         self.cfg = cfg
@@ -728,6 +735,37 @@ class ModuleBatchingEngine:
         self.expert_path = expert_path
         self.grouped_prefill = grouped_prefill
         self.fused_decode = fused_decode
+        # mesh engine (ShardCtx threading — the moe_dispatch='a2a'/'psum'
+        # paths were unreachable from the engine before): a ShardCtx with a
+        # mesh + model axis routes the grouped MoE stage through the
+        # collective dispatch in repro.distributed.ep_engine; everything
+        # else (attention, prefill, sampling) stays the single-device path
+        self.sctx = (sctx if sctx is not None and sctx.mesh is not None
+                     and sctx.model_axis is not None else None)
+        self.ep_chunks = max(1, int(ep_chunks))
+        self.ep_serial = bool(ep_serial)
+        self._ep_params: Dict = {}       # per-layer mesh-placed MoE params
+        if self.sctx is not None:
+            from repro.distributed.ep_engine import validate_ep_shard
+
+            validate_ep_shard(cfg, self.sctx)
+            if expert_path != "grouped":
+                raise ValueError(
+                    "a mesh ShardCtx replaces the grouped MoE stage with "
+                    "the collective dispatch; expert_path='loop' is "
+                    "single-device only"
+                )
+            if self.sctx.moe_dispatch == "a2a" and plan.predict_topk > 0:
+                raise ValueError(
+                    "moe_dispatch='a2a' does not compose with predictive "
+                    "per-expert streaming (predict_topk > 0) for now: the "
+                    "a2a stage needs every rank's expert shard resident"
+                )
+            if stream_weights:
+                raise ValueError(
+                    "stream_weights does not compose with a mesh ShardCtx: "
+                    "the collective stage needs resident expert shards"
+                )
         # KV paging (serving.cache): None / disabled keeps the legacy
         # contiguous buffers; the table is (re)built per init_cache batch
         self.cache_config = cache_config
@@ -738,6 +776,12 @@ class ModuleBatchingEngine:
                 resident_bytes=resident_bytes, prefetch=prefetch,
             )
         self.store = store
+        if self.sctx is not None and not store.fully_resident:
+            raise ValueError(
+                "a mesh ShardCtx needs a fully resident ParamStore: the "
+                "collective MoE stage shards whole expert stacks across "
+                "the model axis and cannot stream them"
+            )
         self.schema = store.schema                  # [(kind, ffn)] per layer
         # kept for introspection/back-compat: (kind, ffn, _) triples
         self.layers: List[Tuple[str, str, None]] = [
@@ -1085,8 +1129,11 @@ class ModuleBatchingEngine:
         htod prefetch has a layer boundary to overlap with).  Same contract
         for KV pages: a fully-device-resident page pool (Mode A) keeps the
         fused path BIT-identical, any host-tier page falls back to the
-        per-layer loop like streamed weights."""
+        per-layer loop like streamed weights.  A mesh engine (``sctx``)
+        always decodes per-module: the collective MoE stage needs its own
+        launch boundary between the attention and FFN stages."""
         return (self.fused_decode and self.expert_path == "grouped"
+                and self.sctx is None
                 and self.store.fully_resident
                 and (self.pages is None or self.pages.fully_resident))
 
@@ -1326,10 +1373,19 @@ class ModuleBatchingEngine:
     def _expert_stage_grouped(self, li, p, x) -> jax.Array:
         """One grouped-dispatch launch for the whole MoE stage: routing,
         gather, expert FFNs and combine all stay on device (§4.2 realized
-        as a single module launch instead of a host-scheduled expert loop)."""
-        y, kept, dropped, load = _grouped_expert_module(
-            self.cfg, p, x, self._expert_capacity(x.shape[0])
-        )
+        as a single module launch instead of a host-scheduled expert loop).
+        A mesh engine routes the same stage through the collective dispatch
+        (``repro.distributed.ep_engine``) — counters keep one meaning."""
+        if self.sctx is not None:
+            from repro.distributed.ep_engine import ep_expert_stage
+
+            y, kept, dropped, load, nbytes = ep_expert_stage(self, li, p, x)
+            self.stats.a2a_bytes += nbytes
+            self.stats.collective_dispatches += 1
+        else:
+            y, kept, dropped, load = _grouped_expert_module(
+                self.cfg, p, x, self._expert_capacity(x.shape[0])
+            )
         self.stats.expert_launches += 1
         j = self._moe_index[li]
         self._kept_dev = self._kept_dev + kept

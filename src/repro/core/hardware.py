@@ -52,6 +52,22 @@ class HardwareProfile:
         """Host attention (GEMV-dominated => bandwidth bound)."""
         return max(flops / self.cpu_flops, kv_bytes / self.cpu_mem_bw)
 
+    def a2a_time(self, nbytes: float, n_ranks: int) -> float:
+        """All-to-all exchange time over ``n_ranks`` expert-parallel ranks.
+
+        ``nbytes`` is the TOTAL payload of the exchange (both directions
+        summed, as reported by ``distributed.a2a_bytes_per_stage``).  Each
+        rank keeps 1/n of its sends local, so only the (n-1)/n fraction
+        crosses the link; the link is the ICI where profiled, else the
+        host-interconnect (multi-GPU boxes exchange over PCIe/NVLink
+        modeled at the host-link rate).
+        """
+        if n_ranks <= 1 or nbytes <= 0:
+            return 0.0
+        bw = self.ici_bw or self.htod_bw
+        wire = nbytes * (n_ranks - 1) / n_ranks
+        return wire / bw + self.launch_overhead_s
+
 
 # --------------------------------------------------------------------------
 # Paper testbeds (Table 3)

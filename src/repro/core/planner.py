@@ -270,6 +270,7 @@ def search_decode(
     scheduler: str = "continuous",
     expert_load: Optional[Iterable[float]] = None,
     max_drop_rate: float = 0.01,
+    mesh_shape: Optional[Tuple[int, int]] = None,
 ) -> SearchResult:
     """``expert_load`` (a per-expert routed-copy histogram, e.g. a drained
     ``EngineStats.expert_load`` row or its layer sum) replaces the uniform-
@@ -278,7 +279,14 @@ def search_decode(
     Candidates also enumerate ``predict_topk`` in {0, default} so the cost
     model can trade whole-stack streaming against predictive per-expert
     prefetch (smaller stream window, more resident bytes, k-hat experts of
-    htod per MoE layer instead of E)."""
+    htod per MoE layer instead of E).
+
+    ``mesh_shape=(dp, ep)`` plans one expert-parallel replica: the decode
+    DAG shards experts E/ep per rank with an all-to-all exchange per MoE
+    layer (``hw.a2a_time``), and the search additionally picks the
+    pipeline chunk count (``plan.ep_chunks`` in {1, 2, 4, 8}) that
+    minimizes the exposed a2a time against the per-chunk dispatch
+    overhead it buys."""
     B_max = host_batch_limit(cfg, hw, ctx)
     if B_max == 0:
         raise ValueError(f"{cfg.name} does not fit in host memory")
@@ -348,13 +356,30 @@ def search_decode(
                             cfg, plan.s_params
                         ).fully_resident:
                             continue
-                        est = estimate_decode(cfg, hw, plan, ctx)
+                        est = estimate_decode(cfg, hw, plan, ctx,
+                                              mesh_shape=mesh_shape)
                         n_eval += 1
                         if best is None or est.throughput > best[0]:
                             best = (est.throughput, plan, est)
         B_try //= 2
     assert best is not None, "no feasible decode plan"
     plan, est = best[1], best[2]
+    # expert-parallel pipelining: with a mesh, re-estimate the winning plan
+    # at each chunk count — more chunks hide more a2a wire time behind the
+    # previous chunk's expert GEMMs but pay extra dispatch launches, so the
+    # optimum is workload-dependent (EPS-MoE-style schedule search)
+    if mesh_shape is not None and mesh_shape[1] > 1 and cfg.has_moe:
+        chunk_best: Optional[Tuple[float, Plan, PhaseEstimate]] = None
+        for chunks in (1, 2, 4, 8):
+            if chunks > max(1, plan.B):
+                continue
+            cand = replace(plan, ep_chunks=chunks)
+            ce = estimate_decode(cfg, hw, cand, ctx, mesh_shape=mesh_shape)
+            n_eval += 1
+            if chunk_best is None or ce.throughput > chunk_best[0]:
+                chunk_best = (ce.throughput, cand, ce)
+        if chunk_best is not None:
+            plan, est = chunk_best[1], chunk_best[2]
     # realized workload prior for the fused chunk: the caller's mean decode
     # length if known, else a coarse quarter-context default
     mean_dec = decode_len if decode_len else max(1, ctx // 4)

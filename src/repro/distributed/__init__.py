@@ -1,0 +1,26 @@
+"""Distributed serving: expert-parallel mesh engine + data-parallel replicas.
+
+Three layers (see README.md in this package):
+
+* ``ep_engine`` — the collective MoE decode stage (pipelined all-to-all /
+  psum) a ``ModuleBatchingEngine`` built with a mesh ``ShardCtx`` selects,
+  plus the ``ExpertParallelEngine`` convenience facade.
+* ``replicas`` — ``ReplicaServer``: one arrival queue fanned across N
+  ``Server`` replicas with a pluggable routing policy and a merged report.
+"""
+from repro.distributed.ep_engine import (
+    ExpertParallelEngine,
+    a2a_bytes_per_stage,
+    pipeline_chunks,
+    validate_ep_shard,
+)
+from repro.distributed.replicas import ReplicaReport, ReplicaServer
+
+__all__ = [
+    "a2a_bytes_per_stage",
+    "ExpertParallelEngine",
+    "pipeline_chunks",
+    "ReplicaReport",
+    "ReplicaServer",
+    "validate_ep_shard",
+]

@@ -1,0 +1,195 @@
+"""Data-parallel replica serving: one arrival queue over N ``Server``s.
+
+``ReplicaServer`` fans submitted requests across independent ``Server``
+replicas — each replica owns its engine, KV cache and virtual clock (the
+data-parallel axis of a ``--mesh dp,ep`` deployment; each replica's engine
+may itself be expert-parallel via ``ServeConfig.sctx``).  The prefix cache
+is SHARED across replicas (one ``PrefixStore`` of host page rows, so a
+prompt prefilled on replica 0 is a prefix hit on replica 1) while KV stays
+per-replica.
+
+Routing is pluggable: ``'round-robin'``, ``'least-loaded'`` (fewest
+outstanding decode tokens, the default), or any callable
+``(servers, request) -> replica index``.
+
+The merged report sums work counters across replicas and takes the
+parallel wall-clock (max of the per-replica phase times) — replicas run
+concurrently in a real deployment, sequentially interleaved here on one
+host, so per-replica reports carry the honest individual timings.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, replace
+from typing import Callable, List, Optional, Union
+
+import numpy as np
+
+from repro.serving.server import (
+    Request,
+    RequestHandle,
+    ServeConfig,
+    ServeReport,
+    Server,
+    StreamConfig,
+)
+
+ROUTING_POLICIES = ("round-robin", "least-loaded")
+
+
+@dataclass
+class ReplicaReport:
+    """``merged`` carries the fleet view; ``per_replica`` the honest
+    individual reports (their own clocks and counters)."""
+
+    merged: ServeReport
+    per_replica: List[ServeReport]
+
+
+class ReplicaServer:
+    """Facade matching the ``Server`` submit/run surface over N replicas."""
+
+    def __init__(
+        self,
+        cfg,
+        params,
+        n_replicas: int,
+        plan=None,
+        serve: ServeConfig = ServeConfig(),
+        stream: StreamConfig = StreamConfig(),
+        policy: Union[str, Callable] = "least-loaded",
+    ) -> None:
+        assert n_replicas >= 1, n_replicas
+        if isinstance(policy, str) and policy not in ROUTING_POLICIES:
+            raise ValueError(
+                f"unknown routing policy {policy!r}; pick one of "
+                f"{ROUTING_POLICIES} or pass a callable"
+            )
+        self.policy = policy
+        self.servers = [
+            Server(cfg, params, plan, serve, stream)
+            for _ in range(n_replicas)
+        ]
+        # shared prefix keys, per-replica KV: every replica consults one
+        # PrefixStore (host page rows), so replica 1 hits what replica 0
+        # prefilled; the device page pools stay replica-local
+        if self.servers[0]._prefix is not None:
+            for s in self.servers[1:]:
+                s._prefix = self.servers[0]._prefix
+        self._rr = 0
+        self._routes: List[tuple] = []    # global index -> (replica, local)
+
+    # -- routing -----------------------------------------------------------
+    def _outstanding(self, server: Server) -> int:
+        """Decode tokens still owed by a replica's unfinished requests —
+        the least-loaded signal."""
+        return sum(h.decode_len for h in server._handles if not h.finished)
+
+    def _pick(self, request: Request) -> int:
+        if callable(self.policy):
+            return int(self.policy(self.servers, request)) % len(self.servers)
+        if self.policy == "round-robin":
+            i = self._rr % len(self.servers)
+            self._rr += 1
+            return i
+        loads = [self._outstanding(s) for s in self.servers]
+        return int(np.argmin(loads))
+
+    # -- Server-shaped surface --------------------------------------------
+    def submit(self, request: Request,
+               on_token=None) -> RequestHandle:
+        i = self._pick(request)
+        h = self.servers[i].submit(request, on_token)
+        self._routes.append((i, h.index))
+        return h
+
+    def has_work(self) -> bool:
+        return any(s.has_work() for s in self.servers)
+
+    def step(self) -> bool:
+        """One interleaved tick: every replica with work steps once."""
+        for s in self.servers:
+            if s.has_work():
+                s.step()
+        return self.has_work()
+
+    def _wait_for_arrival(self) -> None:
+        waits = [
+            s.next_arrival_s - s._now()
+            for s in self.servers
+            if s._pending and not s._any_live()
+        ]
+        if waits:
+            dt = min(waits)
+            if dt > 0:
+                time.sleep(min(dt, 0.05))
+
+    def run(self, until_idle: bool = True) -> ReplicaReport:
+        while self.step():
+            if (not any(s._any_live() for s in self.servers)
+                    and any(s._pending for s in self.servers)):
+                if not until_idle:
+                    break
+                self._wait_for_arrival()
+        return self.finalize()
+
+    def finalize(self) -> ReplicaReport:
+        reports = [s.finalize() for s in self.servers]
+        return ReplicaReport(self._merge(reports), reports)
+
+    # -- merging -----------------------------------------------------------
+    def _merge(self, reports: List[ServeReport]) -> ServeReport:
+        m = ServeReport(scheduler=reports[0].scheduler)
+        # parallel wall-clock: replicas run concurrently in deployment, so
+        # the fleet phase time is the slowest replica's, while work
+        # counters (tokens, bytes, slot-steps) sum
+        m.prefill_s = max(r.prefill_s for r in reports)
+        m.decode_s = max(r.decode_s for r in reports)
+        for r in reports:
+            m.results.extend(r.results)
+            m.decode_slot_steps += r.decode_slot_steps
+            m.wasted_slot_steps += r.wasted_slot_steps
+            m.weight_htod_bytes += r.weight_htod_bytes
+            m.prefetch_wait_s += r.prefetch_wait_s
+            m.admission_deferrals += r.admission_deferrals
+            m.kv_htod_bytes += r.kv_htod_bytes
+            m.kv_dtoh_bytes += r.kv_dtoh_bytes
+            m.prefill_tokens += r.prefill_tokens
+            m._expert_dropped += r._expert_dropped
+            m.expert_pred_hits += r.expert_pred_hits
+            m.expert_pred_misses += r.expert_pred_misses
+            m.expert_lru_hits += r.expert_lru_hits
+            m.capacity_replans += r.capacity_replans
+            m.a2a_bytes += r.a2a_bytes
+            m.collective_dispatches += r.collective_dispatches
+            if r.expert_load is not None:
+                if m.expert_load is None:
+                    m.expert_load = r.expert_load.copy()
+                    m.expert_dropped_by_layer = (
+                        r.expert_dropped_by_layer.copy()
+                    )
+                else:
+                    m.expert_load += r.expert_load
+                    m.expert_dropped_by_layer += r.expert_dropped_by_layer
+        # one shared PrefixStore means each replica reported the SAME
+        # store counters — take them once, don't sum
+        shared = (len(self.servers) > 1
+                  and self.servers[0]._prefix is not None
+                  and all(s._prefix is self.servers[0]._prefix
+                          for s in self.servers))
+        if shared:
+            m.prefix_hits = reports[0].prefix_hits
+            m.prefix_misses = reports[0].prefix_misses
+        else:
+            m.prefix_hits = sum(r.prefix_hits for r in reports)
+            m.prefix_misses = sum(r.prefix_misses for r in reports)
+        # request results re-indexed to global submission order
+        by_replica = [
+            {rr.index: rr for rr in r.request_results} for r in reports
+        ]
+        for g, (i, local) in enumerate(self._routes):
+            rr = by_replica[i].get(local)
+            if rr is not None:
+                m.request_results.append(replace(rr, index=g))
+        m.request_results.sort(key=lambda r: r.index)
+        return m

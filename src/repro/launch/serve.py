@@ -93,6 +93,18 @@ def main() -> None:
                     help="cache shared prompt prefixes at page granularity "
                          "and admit hits by page-row copy instead of "
                          "recomputing prefill (requires --kv-page-tokens)")
+    ap.add_argument("--mesh", default=None, metavar="DP,EP",
+                    help="serve on a dp,ep device mesh: EP shards every "
+                         "MoE layer's experts across EP devices (pipelined "
+                         "all-to-all dispatch, repro.distributed) and DP "
+                         "runs that engine in DP data-parallel Server "
+                         "replicas behind one arrival queue; needs "
+                         "DP*EP visible devices (CPU: XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8)")
+    ap.add_argument("--ep-chunks", type=int, default=None,
+                    help="expert-parallel pipeline chunk count (a2a of "
+                         "chunk k+1 overlaps expert FFN of chunk k); "
+                         "default: the planner's pick for the mesh")
     ap.add_argument("--sanitize", default="off",
                     choices=("off", "log", "strict"),
                     help="run serving under the analysis sanitizer: decode "
@@ -104,11 +116,32 @@ def main() -> None:
 
     hw = PROFILES[args.profile]
 
+    dp = ep = 1
+    if args.mesh:
+        try:
+            dp, ep = (int(x) for x in args.mesh.split(","))
+        except ValueError:
+            raise SystemExit(f"--mesh wants DP,EP (got {args.mesh!r})")
+        if dp < 1 or ep < 1:
+            raise SystemExit(f"--mesh axes must be >= 1 (got {args.mesh!r})")
+        if len(jax.devices()) < ep:
+            raise SystemExit(
+                f"--mesh {args.mesh} needs {ep} devices for the expert-"
+                f"parallel axis but only {len(jax.devices())} are visible; "
+                "on CPU set XLA_FLAGS=--xla_force_host_platform_device_"
+                "count=8 before launch")
+        if args.stream_weights or args.resident_gb is not None \
+                or args.predict_topk is not None:
+            raise SystemExit("--mesh serves fully-resident replicas; it "
+                             "composes with neither --stream-weights nor "
+                             "predictive streaming")
+
     # 1. plan on the FULL config with the paper's search
     full = get_config(args.arch)
     res = planner.search_decode(
         full, hw, ctx=args.prompt_len + args.decode_len,
         decode_len=args.decode_len, scheduler=args.scheduler,
+        mesh_shape=(dp, ep) if args.mesh else None,
     )
     print(f"planned ({full.name} on {hw.name}): {res.plan.describe()}")
     rp_full = W.plan_residency(full, res.plan.s_params)
@@ -148,6 +181,8 @@ def main() -> None:
         s_params=res.plan.s_params,
         s_expert=res.plan.s_expert,
         predict_topk=res.plan.predict_topk,
+        ep_chunks=(args.ep_chunks if args.ep_chunks
+                   else res.plan.ep_chunks),
     )
     # re-plan the fused chunk T at the smoke batch (the admission cadence
     # scales with B, so the full-config T would over- or under-chunk here)
@@ -201,18 +236,54 @@ def main() -> None:
 
     from repro import analysis
 
+    sctx = None
+    if args.mesh and ep > 1:
+        from repro.launch.mesh import make_debug_mesh
+        from repro.sharding.specs import ShardCtx
+
+        sctx = ShardCtx(mesh=make_debug_mesh(1, ep), batch_axes=("data",),
+                        model_axis="model", moe_dispatch="a2a")
+        print(f"mesh: dp={dp} replicas x ep={ep} expert-parallel ranks, "
+              f"ep_chunks={plan.ep_chunks}")
+
     san_ctx = (analysis.sanitize(strict=args.sanitize == "strict",
                                  donation=True)
                if args.sanitize != "off" else contextlib.nullcontext())
+    per_replica = None
     with san_ctx as san:
-        report = serve_dataset(cfg, params, requests, plan, args.decode_len,
-                               expert_path=args.expert_path,
-                               scheduler=args.scheduler, eos_id=args.eos_id,
-                               store=store,
-                               hw=hw if args.scheduler == "continuous" else None,
-                               kv_page_tokens=args.kv_page_tokens,
-                               device_kv_gb=args.device_kv_gb,
-                               prefix_cache=args.prefix_cache)
+        if dp > 1:
+            # data-parallel fan-out: one arrival queue over dp Server
+            # replicas (shared prefix keys, per-replica KV/engines)
+            from repro.distributed import ReplicaServer
+            from repro.serving.server import ServeConfig
+
+            rserver = ReplicaServer(
+                cfg, params, dp, plan=plan,
+                serve=ServeConfig(
+                    scheduler=args.scheduler, decode_len=args.decode_len,
+                    eos_id=args.eos_id, expert_path=args.expert_path,
+                    hw=hw if args.scheduler == "continuous" else None,
+                    kv_page_tokens=args.kv_page_tokens,
+                    device_kv_gb=args.device_kv_gb,
+                    prefix_cache=args.prefix_cache,
+                    sctx=sctx, ep_chunks=plan.ep_chunks,
+                ),
+            )
+            for r in requests:
+                rserver.submit(r)
+            rrep = rserver.run()
+            report, per_replica = rrep.merged, rrep.per_replica
+        else:
+            report = serve_dataset(
+                cfg, params, requests, plan, args.decode_len,
+                expert_path=args.expert_path,
+                scheduler=args.scheduler, eos_id=args.eos_id,
+                store=store,
+                hw=hw if args.scheduler == "continuous" else None,
+                kv_page_tokens=args.kv_page_tokens,
+                device_kv_gb=args.device_kv_gb,
+                prefix_cache=args.prefix_cache,
+                sctx=sctx, ep_chunks=plan.ep_chunks)
     if san is not None:
         rep = san.report()
         planned = ", ".join(f"{k}={v}" for k, v in
@@ -230,6 +301,16 @@ def main() -> None:
           f"(wasted {report.wasted_slot_steps}, "
           f"occupancy {report.occupancy:.0%}); "
           f"mean request latency {report.mean_latency_s:.2f}s")
+    if per_replica is not None:
+        for i, r in enumerate(per_replica):
+            print(f"replica[{i}]: {len(r.request_results)} requests, "
+                  f"{r.decode_throughput:.1f} decode tok/s, "
+                  f"occupancy {r.occupancy:.0%}, "
+                  f"a2a {r.a2a_gb:.4f}GB")
+    if report.collective_dispatches:
+        print(f"expert-parallel a2a: {report.a2a_gb:.4f}GB exchanged over "
+              f"{report.collective_dispatches} collective dispatches "
+              f"(ep={ep}, chunks={plan.ep_chunks})")
     print(f"TTFT p50/p95: {report.ttft_percentile(50):.3f}/"
           f"{report.ttft_percentile(95):.3f}s; "
           f"TPOT p50/p95: {report.tpot_percentile(50)*1e3:.1f}/"

@@ -57,6 +57,8 @@ def serve_dataset(
     kv_page_tokens: int = 0,
     device_kv_gb: Optional[float] = None,
     prefix_cache: bool = False,
+    sctx=None,
+    ep_chunks: int = 1,
 ) -> ServeReport:
     """Serve a fixed request list to completion (the offline protocol).
 
@@ -84,6 +86,10 @@ def serve_dataset(
     overrides the residency arguments (one store is always shared by every
     engine the scheduler creates).
 
+    ``sctx`` (a mesh ``ShardCtx`` with ``moe_dispatch`` 'a2a'/'psum') runs
+    the engine expert-parallel across the mesh's model axis; ``ep_chunks``
+    picks the pipelined all-to-all chunk count (``repro.distributed``).
+
     ``hw`` enables memory-aware admission in the continuous scheduler:
     a queued request is admitted only while every in-flight sequence's
     offloaded KV/state (at its full prompt+decode extent) fits the Eq. 2
@@ -101,7 +107,7 @@ def serve_dataset(
             max_prompt_len=max_prompt_len, pad_id=pad_id, eos_id=eos_id,
             expert_path=expert_path, grouped_prefill=grouped_prefill, hw=hw,
             kv_page_tokens=kv_page_tokens, device_kv_gb=device_kv_gb,
-            prefix_cache=prefix_cache,
+            prefix_cache=prefix_cache, sctx=sctx, ep_chunks=ep_chunks,
         ),
         stream=StreamConfig(
             stream_weights=stream_weights, resident_bytes=resident_bytes,

@@ -117,6 +117,13 @@ class ServeConfig:
     #   None disables re-planning
     replan_drop_target: float = 0.01     # expected drop-rate bound the
     #                                      re-planned capacity is sized for
+    sctx: Optional[object] = None        # sharding.specs.ShardCtx with a mesh
+    #   + model axis: the engine runs the MoE stage as collective dispatch
+    #   (repro.distributed.ep_engine); None = single-device (byte-identical
+    #   to the pre-mesh paths)
+    ep_chunks: int = 1                   # pipeline chunks the a2a MoE stage
+    #   splits the accumulated batch into (chunk k+1's all-to-all overlaps
+    #   chunk k's expert FFN); 1 = serial dispatch
 
     def __post_init__(self) -> None:
         assert self.scheduler in ("static", "continuous"), self.scheduler
@@ -220,10 +227,18 @@ class ServeReport:
     expert_pred_misses: int = 0   # demand-fetched (mispredicted/cold) experts
     expert_lru_hits: int = 0      # served from the hot-expert device LRU
     capacity_replans: int = 0     # online b_e re-plans on measured skew drift
+    a2a_bytes: int = 0            # interconnect bytes the mesh MoE stage
+    #                               exchanged (a2a dispatch + return)
+    collective_dispatches: int = 0  # mesh MoE stage launches (a2a/psum)
 
     @property
     def total_s(self) -> float:
         return self.prefill_s + self.decode_s
+
+    @property
+    def a2a_gb(self) -> float:
+        """Expert-parallel all-to-all traffic in GB (0 off-mesh)."""
+        return self.a2a_bytes / 1e9
 
     @property
     def htod_gb(self) -> float:
@@ -465,7 +480,7 @@ class Server:
         self._max_seq: Optional[int] = serve.max_seq
         # engine-stat totals already drained into the report
         self._seen = {"drop": 0, "htod": 0, "wait": 0.0, "kvh": 0, "kvd": 0,
-                      "ph": 0, "pm": 0, "lh": 0}
+                      "ph": 0, "pm": 0, "lh": 0, "a2a": 0, "cd": 0}
         # online capacity re-plan (replan_skew): the hottest expert's share
         # at the last (re-)plan; None until the first measurement
         self._replan_share: Optional[float] = None
@@ -587,6 +602,7 @@ class Server:
             expert_path=self.serve.expert_path,
             grouped_prefill=self.serve.grouped_prefill, store=self._store,
             cache_config=self._cache_config(),
+            sctx=self.serve.sctx, ep_chunks=self.serve.ep_chunks,
         )
         self._engine.init_cache(self._b)
         self._sampler = BatchSampler(self._b)
@@ -625,6 +641,9 @@ class Server:
         self.report.expert_pred_misses += (st.expert_pred_misses
                                            - self._seen["pm"])
         self.report.expert_lru_hits += st.expert_lru_hits - self._seen["lh"]
+        self.report.a2a_bytes += st.a2a_bytes - self._seen["a2a"]
+        self.report.collective_dispatches += (st.collective_dispatches
+                                              - self._seen["cd"])
         # cumulative engine totals — one engine per server, so the report's
         # arrays are simply the latest snapshot (copies: the engine keeps
         # accumulating into its own buffers)
@@ -640,7 +659,9 @@ class Server:
                       "kvd": st.kv_dtoh_bytes,
                       "ph": st.expert_pred_hits,
                       "pm": st.expert_pred_misses,
-                      "lh": st.expert_lru_hits}
+                      "lh": st.expert_lru_hits,
+                      "a2a": st.a2a_bytes,
+                      "cd": st.collective_dispatches}
         return d_drop
 
     def _maybe_replan(self) -> None:
