@@ -669,6 +669,11 @@ class EngineStats:
     #                                      stage exchanged (a2a dispatch +
     #                                      return; 0 off-mesh / psum path)
     collective_dispatches: int = 0       # mesh MoE stage launches (a2a/psum)
+    transfer_retries: int = 0            # transient stream-fetch failures
+    #                                      recovered by the retry policy
+    #                                      (weight + expert + KV-page windows)
+    transfer_timeouts: int = 0           # watchdog-expired acquire waits
+    #                                      recovered by demand re-fetch
 
 
 class ModuleBatchingEngine:
@@ -882,6 +887,12 @@ class ModuleBatchingEngine:
             self.stats.kv_htod_bytes += kv_htod
             self.stats.kv_dtoh_bytes += kv_dtoh
             self.stats.kv_stream_wait_s += kv_wait
+        for taker in (getattr(self.store, "take_fault_counters", None),
+                      getattr(self.pages, "take_fault_counters", None)):
+            if taker is not None:
+                retries, timeouts = taker()
+                self.stats.transfer_retries += retries
+                self.stats.transfer_timeouts += timeouts
         return self.stats
 
     # -- cache management ---------------------------------------------
@@ -947,6 +958,67 @@ class ModuleBatchingEngine:
         if self.pages is not None:
             self.pages.free_rows([int(r) for r in np.asarray(rows).reshape(-1)])
         self._poison_stale(stale)
+
+    def reserve_slot_rows(self, rows) -> None:
+        """Pre-admission page-frame reservation for batch rows ``rows``
+        (no-op without paging; idempotent — ``_write_cache_rows`` reuses
+        the placement).  Raises ``faults.PageAllocOOM`` when the table is
+        out of frames (or an armed fault plan injects one) BEFORE any
+        prefill compute is spent, so the scheduler can degrade gracefully
+        (defer / demote / shrink) instead of aborting mid-wave."""
+        if self.pages is None:
+            return
+        rows_l = [int(r) for r in np.asarray(rows).reshape(-1)]
+        n_host = int(round(self.plan.omega * (self._batch or len(rows_l))))
+        self.pages.ensure_rows(
+            rows_l, prefer_host=[r < n_host for r in rows_l]
+        )
+
+    # -- preemption checkpoints -------------------------------------------
+    def checkpoint_slot(self, slot: int) -> List[Dict[str, np.ndarray]]:
+        """Snapshot batch row ``slot``'s FULL per-layer decode state as
+        host-side numpy (attention KV rows — contiguous or paged — and SSM
+        h/conv state): the KV half of a request preemption checkpoint.
+        Host copies are donation-safe to retain across later ticks."""
+        from repro.serving.kvcache import snapshot_row
+
+        assert self.cache is not None
+        slot = int(slot)
+        out: List[Dict[str, np.ndarray]] = []
+        with sanitizer.allowed("ckpt-save"):
+            for li, (kind, _) in enumerate(self.schema):
+                if (kind == "attn" and self.pages is not None
+                        and not self.pages.fully_resident):
+                    k, v = self.pages.read_row(li, slot, self.pages.span)
+                    out.append({"k": k, "v": v})
+                else:
+                    out.append(snapshot_row(self.cache[li], slot))
+        return out
+
+    def restore_slot(self, slot: int, state: List[Dict[str, np.ndarray]]) -> None:
+        """Write a ``checkpoint_slot`` snapshot back into batch row
+        ``slot`` (resume): page frames are re-reserved (may raise
+        ``PageAllocOOM`` — the resume then stays queued) and every layer's
+        rows are restored eagerly.  With the sampler key/step and ``pos``
+        restored by the scheduler, decode continues bit-identical to the
+        unpreempted run — zero prefill relaunches."""
+        from repro.serving.kvcache import restore_row
+
+        assert self.cache is not None
+        slot = int(slot)
+        if self.pages is not None:
+            self.reserve_slot_rows([slot])
+        with sanitizer.allowed("ckpt-restore"):
+            for li, (kind, _) in enumerate(self.schema):
+                st = state[li]
+                if (kind == "attn" and self.pages is not None
+                        and not self.pages.fully_resident):
+                    self.pages.insert_rows(
+                        li, jnp.asarray(st["k"])[None],
+                        jnp.asarray(st["v"])[None], [slot]
+                    )
+                    continue
+                self.cache[li] = restore_row(self.cache[li], slot, st)
 
     # -- sanitizer hooks -------------------------------------------------
     def _stale_snapshot(self) -> Optional[List]:

@@ -25,6 +25,7 @@ from typing import Callable, List, Optional, Union
 
 import numpy as np
 
+from repro import faults
 from repro.serving.server import (
     Request,
     RequestHandle,
@@ -66,6 +67,12 @@ class ReplicaServer:
                 f"{ROUTING_POLICIES} or pass a callable"
             )
         self.policy = policy
+        # ONE resolved fault plan shared by the fleet and every replica
+        # (one ledger; the kill schedule is consulted on the fleet's step
+        # clock, the stream/page/preempt seams on each replica's)
+        self._faults = faults.resolve(serve.faults)
+        if self._faults is not None:
+            serve = replace(serve, faults=self._faults)
         self.servers = [
             Server(cfg, params, plan, serve, stream)
             for _ in range(n_replicas)
@@ -78,22 +85,37 @@ class ReplicaServer:
                 s._prefix = self.servers[0]._prefix
         self._rr = 0
         self._routes: List[tuple] = []    # global index -> (replica, local)
+        # failover state: dead replicas never step again; their unfinished
+        # requests are resubmitted from scratch onto survivors (the
+        # sampling determinism contract makes the regenerated streams
+        # token-identical) and the routes remapped
+        self._dead: set = set()
+        self._steps = 0                   # fleet step clock (kill schedule)
+        self.failovers = 0
+        self.requeued = 0
 
     # -- routing -----------------------------------------------------------
+    def _alive(self) -> List[int]:
+        return [i for i in range(len(self.servers)) if i not in self._dead]
+
     def _outstanding(self, server: Server) -> int:
         """Decode tokens still owed by a replica's unfinished requests —
         the least-loaded signal."""
         return sum(h.decode_len for h in server._handles if not h.finished)
 
     def _pick(self, request: Request) -> int:
+        alive = self._alive()
         if callable(self.policy):
-            return int(self.policy(self.servers, request)) % len(self.servers)
+            i = int(self.policy(self.servers, request)) % len(self.servers)
+            if i in self._dead:
+                i = alive[i % len(alive)]
+            return i
         if self.policy == "round-robin":
-            i = self._rr % len(self.servers)
+            i = alive[self._rr % len(alive)]
             self._rr += 1
             return i
-        loads = [self._outstanding(s) for s in self.servers]
-        return int(np.argmin(loads))
+        loads = [self._outstanding(self.servers[i]) for i in alive]
+        return alive[int(np.argmin(loads))]
 
     # -- Server-shaped surface --------------------------------------------
     def submit(self, request: Request,
@@ -104,19 +126,75 @@ class ReplicaServer:
         return h
 
     def has_work(self) -> bool:
-        return any(s.has_work() for s in self.servers)
+        return any(self.servers[i].has_work() for i in self._alive())
 
     def step(self) -> bool:
-        """One interleaved tick: every replica with work steps once."""
-        for s in self.servers:
+        """One interleaved tick: every live replica with work steps once.
+
+        Failure detection: an injected kill (the fault plan's
+        ``kill=R@N`` schedule, on this fleet step clock) or a replica
+        whose step escapes with a ``faults.FaultError`` (recovery
+        exhausted — e.g. ``StreamTimeoutError``) declares the replica
+        dead; its unfinished requests fail over to survivors.  Any other
+        exception type propagates — bugs abort loudly, they are not
+        absorbed by failover."""
+        self._steps += 1
+        fp = self._faults if self._faults is not None else faults.current()
+        for i in self._alive():
+            s = self.servers[i]
+            if fp is not None and fp.kill_due(i, self._steps):
+                self._kill(i)
+                continue
             if s.has_work():
-                s.step()
+                try:
+                    s.step()
+                except faults.FaultError:
+                    self._kill(i)
         return self.has_work()
+
+    def _kill(self, i: int) -> None:
+        """Declare replica ``i`` dead and fail over: its unfinished
+        requests (queued, running, or preempted — their KV is lost with
+        the replica) are resubmitted from scratch onto survivors, and the
+        global routes remapped so the merged report carries the
+        survivor's token-identical regenerated results.  Requests the
+        replica already finished keep their results.  Streaming callbacks
+        on failed-over requests re-fire from the first token
+        (at-least-once delivery)."""
+        self._dead.add(i)
+        alive = self._alive()
+        if not alive:
+            raise faults.FaultError(
+                f"replica {i} died with no survivors to fail over to"
+            )
+        self.failovers += 1
+        faults_local = self._faults
+        if faults_local is not None:
+            faults_local.note("failover")
+        back = {(ri, local): g for g, (ri, local) in enumerate(self._routes)}
+        for h in self.servers[i]._handles:
+            if h.finished:
+                continue
+            j = alive[self._rr % len(alive)]
+            self._rr += 1
+            nh = self.servers[j].submit(
+                Request(h.prompt, h.decode_len, arrival_s=h.arrival_s,
+                        sampling=h.sampling),
+                on_token=h.on_token,
+            )
+            self._routes[back[(i, h.index)]] = (j, nh.index)
+            self.requeued += 1
+            if faults_local is not None:
+                faults_local.note("failover-requeue")
+        # the dead replica never steps again — drop its queue/checkpoints
+        # so fleet-level idle checks don't see phantom work
+        self.servers[i]._pending.clear()
+        self.servers[i]._ckpts.clear()
 
     def _wait_for_arrival(self) -> None:
         waits = [
             s.next_arrival_s - s._now()
-            for s in self.servers
+            for s in (self.servers[i] for i in self._alive())
             if s._pending and not s._any_live()
         ]
         if waits:
@@ -126,8 +204,9 @@ class ReplicaServer:
 
     def run(self, until_idle: bool = True) -> ReplicaReport:
         while self.step():
-            if (not any(s._any_live() for s in self.servers)
-                    and any(s._pending for s in self.servers)):
+            alive = [self.servers[i] for i in self._alive()]
+            if (not any(s._any_live() for s in alive)
+                    and any(s._pending for s in alive)):
                 if not until_idle:
                     break
                 self._wait_for_arrival()
@@ -162,6 +241,13 @@ class ReplicaServer:
             m.capacity_replans += r.capacity_replans
             m.a2a_bytes += r.a2a_bytes
             m.collective_dispatches += r.collective_dispatches
+            m.transfer_retries += r.transfer_retries
+            m.transfer_timeouts += r.transfer_timeouts
+            m.preemptions += r.preemptions
+            m.resumes += r.resumes
+            m.degrade_deferrals += r.degrade_deferrals
+            m.page_demotions += r.page_demotions
+            m.chunk_shrinks += r.chunk_shrinks
             if r.expert_load is not None:
                 if m.expert_load is None:
                     m.expert_load = r.expert_load.copy()
@@ -192,4 +278,7 @@ class ReplicaServer:
             if rr is not None:
                 m.request_results.append(replace(rr, index=g))
         m.request_results.sort(key=lambda r: r.index)
+        # fleet-level failover accounting (replicas can't see it)
+        m.failovers = self.failovers
+        m.requeued_requests = self.requeued
         return m

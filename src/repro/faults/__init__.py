@@ -1,0 +1,22 @@
+"""Deterministic fault injection + recovery policies (see ``plan.py``)."""
+from repro.faults.plan import (  # noqa: F401
+    FaultError,
+    FaultPlan,
+    FaultSpec,
+    PageAllocOOM,
+    RetryPolicy,
+    StreamTimeoutError,
+    TransientTransferError,
+    armed,
+    current,
+    note,
+    parse_spec,
+    resolve,
+    shielded,
+)
+
+__all__ = [
+    "FaultError", "FaultPlan", "FaultSpec", "PageAllocOOM", "RetryPolicy",
+    "StreamTimeoutError", "TransientTransferError", "armed", "current",
+    "note", "parse_spec", "resolve", "shielded",
+]

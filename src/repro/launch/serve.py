@@ -105,6 +105,14 @@ def main() -> None:
                     help="expert-parallel pipeline chunk count (a2a of "
                          "chunk k+1 overlaps expert FFN of chunk k); "
                          "default: the planner's pick for the mesh")
+    ap.add_argument("--faults", default=None, metavar="SPEC",
+                    help="arm deterministic fault injection for the run, "
+                         "e.g. 'seed=3,transfer=0.2,stall=0.05,oom=0.1,"
+                         "preempt=7,kill=1@4' (repro.faults spec grammar); "
+                         "recovery is exercised and counted — retried "
+                         "transfers, preempt/resume checkpoints, replica "
+                         "failover — and the served tokens stay identical "
+                         "to the unarmed run")
     ap.add_argument("--sanitize", default="off",
                     choices=("off", "log", "strict"),
                     help="run serving under the analysis sanitizer: decode "
@@ -267,6 +275,7 @@ def main() -> None:
                     device_kv_gb=args.device_kv_gb,
                     prefix_cache=args.prefix_cache,
                     sctx=sctx, ep_chunks=plan.ep_chunks,
+                    faults=args.faults,
                 ),
             )
             for r in requests:
@@ -283,7 +292,8 @@ def main() -> None:
                 kv_page_tokens=args.kv_page_tokens,
                 device_kv_gb=args.device_kv_gb,
                 prefix_cache=args.prefix_cache,
-                sctx=sctx, ep_chunks=plan.ep_chunks)
+                sctx=sctx, ep_chunks=plan.ep_chunks,
+                faults=args.faults)
     if san is not None:
         rep = san.report()
         planned = ", ".join(f"{k}={v}" for k, v in
@@ -347,6 +357,19 @@ def main() -> None:
     if report.admission_deferrals:
         print(f"admissions deferred by the Eq. 2 host KV budget: "
               f"{report.admission_deferrals}")
+    if args.faults or report.transfer_retries or report.preemptions \
+            or report.failovers:
+        print(f"fault recovery: {report.transfer_retries} transfer retries, "
+              f"{report.transfer_timeouts} watchdog timeouts; "
+              f"{report.preemptions} preemptions / {report.resumes} resumes; "
+              f"{report.failovers} replica failovers "
+              f"({report.requeued_requests} requests requeued)")
+        if report.degrade_deferrals or report.page_demotions \
+                or report.chunk_shrinks:
+            print(f"memory-pressure degradation: "
+                  f"{report.degrade_deferrals} admission deferrals, "
+                  f"{report.page_demotions} pages demoted to host, "
+                  f"{report.chunk_shrinks} decode-chunk shrinks")
 
 
 if __name__ == "__main__":

@@ -44,6 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import faults
 from repro.analysis import runtime as sanitizer
 from repro.configs.base import ModelConfig
 from repro.serving.weights import StreamWindow
@@ -197,7 +198,9 @@ class KVPageTable:
         if a:
             f = a.pop()
             return self.device_frames + f if first_is_host else f
-        assert b, "page table out of frames (batch rows exceed capacity?)"
+        if not b:
+            raise faults.PageAllocOOM(
+                "page table out of frames (batch rows exceed capacity?)")
         f = b.pop()
         return f if first_is_host else self.device_frames + f
 
@@ -206,13 +209,27 @@ class KVPageTable:
         """Allocate page frames for ``rows`` (no-op for already-allocated
         rows — re-inserting into a live slot reuses its placement).
         ``prefer_host[i]`` biases row ``i`` toward the host tier (the ω
-        host-attention rows); either tier spills into the other."""
+        host-attention rows); either tier spills into the other.
+
+        Allocation is transactional per row: on ``PageAllocOOM`` (real
+        frame exhaustion, or an injected fault from the armed plan) the
+        partially-allocated row is rolled back before the error
+        propagates, so the admission layer can defer/degrade and retry
+        without leaking frames."""
         for i, r in enumerate(rows):
             if self.page_map[r, 0] >= 0:
                 continue
+            fp = faults.current()
+            if fp is not None and fp.page_oom():
+                raise faults.PageAllocOOM(
+                    f"injected page-alloc OOM (row {r})")
             ph = bool(prefer_host[i]) if prefer_host is not None else False
-            for pp in range(self.pages_per_seq):
-                self.page_map[r, pp] = self._alloc_frame(ph)
+            try:
+                for pp in range(self.pages_per_seq):
+                    self.page_map[r, pp] = self._alloc_frame(ph)
+            except faults.PageAllocOOM:
+                self.free_rows([r])
+                raise
         self._bump_all()
 
     def free_rows(self, rows: Sequence[int]) -> None:
@@ -383,6 +400,46 @@ class KVPageTable:
             jax.block_until_ready((k, v))
         return k, v
 
+    # -- memory-pressure degradation -------------------------------------
+    def demote_device_frames(self, limit: int) -> int:
+        """Move up to ``limit`` live DEVICE frames to free host frames
+        (stage 2 of the admission degradation ladder: relieve device-pool
+        pressure instead of raising).  Deterministic victim order —
+        highest batch row, highest page first (the coldest end of the
+        admission order).  Mode A has no host tier, so this is a no-op
+        there; returns the number of frames actually moved.
+
+        Placement-only: Mode B math is independent of which tier a page
+        lives in (the gather reassembles either), so demotion never
+        changes tokens — only where the bytes sit."""
+        if self._window is None or limit <= 0:
+            return 0
+        moved = 0
+        for r in reversed(range(self.batch)):
+            for pp in reversed(range(self.pages_per_seq)):
+                if moved >= limit or not self._free_host:
+                    break
+                f = int(self.page_map[r, pp])
+                if not (0 <= f < self.device_frames):
+                    continue
+                h = self._free_host.pop()
+                with sanitizer.allowed("paged-host-writeback"):
+                    for li in self.attn_layers:
+                        k = np.asarray(self.pool_k[li][f])
+                        v = np.asarray(self.pool_v[li][f])
+                        self.host_k[li][h] = k
+                        self.host_v[li][h] = v
+                        self.dtoh_bytes += k.nbytes + v.nbytes
+                self.page_map[r, pp] = self.device_frames + h
+                self._free_dev.append(f)
+                moved += 1
+            if moved >= limit or not self._free_host:
+                break
+        if moved:
+            faults.note("recovered:page-demotion", moved)
+            self._bump_all()
+        return moved
+
     # -- accounting ------------------------------------------------------
     def take_counters(self) -> Tuple[int, int, float]:
         """Drain (htod_bytes, dtoh_bytes, stream_wait_s) since last call."""
@@ -391,6 +448,12 @@ class KVPageTable:
         dtoh = self.dtoh_bytes
         self.dtoh_bytes = 0
         return htod, dtoh, wait
+
+    def take_fault_counters(self) -> Tuple[int, int]:
+        """Drain (transfer retries, watchdog timeouts) of the page stream
+        window since the last call."""
+        return (self._window.take_fault_counters()
+                if self._window is not None else (0, 0))
 
 
 class PrefixStore:

@@ -173,5 +173,29 @@ def evict_rows(cache: List, rows: Sequence[int]) -> List:
     return list(_evict_module(tuple(cache), jnp.asarray(_pad_evict_rows(rows))))
 
 
+def snapshot_row(layer_cache: dict, row: int) -> dict:
+    """Host snapshot of one batch row of a contiguous layer buffer.
+
+    The checkpoint unit of request preemption: every decode-buffer entry
+    is batch-leading (attn ``{"k","v"}: (B, span, K, hd)``; SSM
+    ``{"h","conv"}``), so one row per layer captures a sequence's full
+    recurrent state.  Rows come back as NumPy (host) arrays — checkpoints
+    live in host memory while the device slot is recycled.
+    """
+    return {key: np.asarray(val[row]) for key, val in layer_cache.items()}
+
+
+def restore_row(layer_cache: dict, row: int, state: dict) -> dict:
+    """Write a ``snapshot_row`` checkpoint back into batch row ``row``.
+
+    The inverse of ``snapshot_row`` for contiguous buffers; Mode B paged
+    attention restores through ``KVPageTable.insert_rows`` instead (the
+    row's frames were freed with the slot)."""
+    return {
+        key: layer_cache[key].at[row].set(jnp.asarray(state[key]))
+        for key in layer_cache
+    }
+
+
 def cache_bytes(cache: List) -> int:
     return sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(cache))

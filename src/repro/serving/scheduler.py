@@ -59,6 +59,7 @@ def serve_dataset(
     prefix_cache: bool = False,
     sctx=None,
     ep_chunks: int = 1,
+    faults=None,
 ) -> ServeReport:
     """Serve a fixed request list to completion (the offline protocol).
 
@@ -96,6 +97,11 @@ def serve_dataset(
     host budget (``m_c - S_Model``) — over-long prompts wait instead of
     overflowing host memory (``ServeReport.admission_deferrals`` counts the
     waits).  A request that could never fit raises ``ValueError``.
+
+    ``faults`` arms a deterministic fault-injection plan for the run (a
+    ``repro.faults.FaultPlan`` / ``FaultSpec`` / spec string — see
+    ``ServeConfig.faults``); ``None`` leaves serving byte-identical to an
+    unarmed build.
     """
     assert scheduler in ("static", "continuous"), scheduler
     if not requests:
@@ -108,6 +114,7 @@ def serve_dataset(
             expert_path=expert_path, grouped_prefill=grouped_prefill, hw=hw,
             kv_page_tokens=kv_page_tokens, device_kv_gb=device_kv_gb,
             prefix_cache=prefix_cache, sctx=sctx, ep_chunks=ep_chunks,
+            faults=faults,
         ),
         stream=StreamConfig(
             stream_weights=stream_weights, resident_bytes=resident_bytes,

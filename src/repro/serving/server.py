@@ -54,6 +54,7 @@ from typing import Callable, Dict, Iterator, List, Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro import faults
 from repro.analysis import runtime as sanitizer
 from repro.analysis.markers import hot_path
 from repro.configs.base import ModelConfig
@@ -124,6 +125,12 @@ class ServeConfig:
     ep_chunks: int = 1                   # pipeline chunks the a2a MoE stage
     #   splits the accumulated batch into (chunk k+1's all-to-all overlaps
     #   chunk k's expert FFN); 1 = serial dispatch
+    faults: Optional[object] = None      # fault-injection schedule: a
+    #   repro.faults FaultPlan / FaultSpec / spec string ("seed=0,
+    #   transfer=0.1,..."); None = unarmed (the ambient REPRO_FAULTS plan,
+    #   if any, still applies).  Armed around every step, so the stream /
+    #   page / preemption seams consult it; recovery is counted in the
+    #   report (transfer_retries, preemptions, ...)
 
     def __post_init__(self) -> None:
         assert self.scheduler in ("static", "continuous"), self.scheduler
@@ -230,6 +237,17 @@ class ServeReport:
     a2a_bytes: int = 0            # interconnect bytes the mesh MoE stage
     #                               exchanged (a2a dispatch + return)
     collective_dispatches: int = 0  # mesh MoE stage launches (a2a/psum)
+    # fault-recovery accounting (repro.faults): every recovery is counted
+    # so fault handling is observable, never silent
+    transfer_retries: int = 0     # transient stream fetches recovered by retry
+    transfer_timeouts: int = 0    # watchdog-expired waits recovered by re-fetch
+    preemptions: int = 0          # running requests evicted to host checkpoints
+    resumes: int = 0              # checkpoints re-admitted (zero prefill relaunch)
+    degrade_deferrals: int = 0    # admissions deferred under page-alloc pressure
+    page_demotions: int = 0       # device page frames demoted to the host tier
+    chunk_shrinks: int = 0        # decode-chunk cap halvings under pressure
+    failovers: int = 0            # dead replicas failed over (ReplicaServer)
+    requeued_requests: int = 0    # requests requeued onto surviving replicas
 
     @property
     def total_s(self) -> float:
@@ -386,7 +404,9 @@ class RequestHandle:
         self.sampling = request.sampling
         self.arrival_s = float(request.arrival_s or 0.0)
         self.on_token = on_token
-        self.status = "queued"            # queued -> running -> finished
+        # queued -> running -> finished, with running <-> preempted when
+        # the server evicts the request to a host checkpoint and resumes it
+        self.status = "queued"
         self.tokens: List[int] = []
         self.admit_s = float("nan")
         self.first_token_s = float("nan")
@@ -480,7 +500,8 @@ class Server:
         self._max_seq: Optional[int] = serve.max_seq
         # engine-stat totals already drained into the report
         self._seen = {"drop": 0, "htod": 0, "wait": 0.0, "kvh": 0, "kvd": 0,
-                      "ph": 0, "pm": 0, "lh": 0, "a2a": 0, "cd": 0}
+                      "ph": 0, "pm": 0, "lh": 0, "a2a": 0, "cd": 0,
+                      "retr": 0, "tmo": 0}
         # online capacity re-plan (replan_skew): the hottest expert's share
         # at the last (re-)plan; None until the first measurement
         self._replan_share: Optional[float] = None
@@ -501,6 +522,15 @@ class Server:
         self._cur: Optional[np.ndarray] = None
         self._pos: Optional[np.ndarray] = None
         self._wave: Optional[Dict] = None     # static policy's in-flight wave
+        # fault tolerance (repro.faults): the resolved plan is armed around
+        # every step; preempted requests wait in _ckpts (FIFO) for a slot
+        self._faults = faults.resolve(serve.faults)
+        self._ckpts: deque = deque()          # host-side request checkpoints
+        self._ticks = 0                       # decode ticks run (virtual clock)
+        self._preempt_due_at: Optional[int] = None   # next injected preempt
+        self._pressure = 0                    # consecutive page-OOM events
+        self._shrink_cap: Optional[int] = None   # degraded decode-chunk cap
+        self._shrink_ticks = 0                # steps the shrink stays active
 
     # -- lifecycle: submit -------------------------------------------------
     def submit(self, request: Request,
@@ -510,6 +540,12 @@ class Server:
         Raises ``ValueError`` immediately for a request that could never be
         served: prompt+decode beyond ``max_seq``, or (continuous with
         ``hw``) KV/state that can never fit the Eq. 2 host budget.
+
+        Error-path invariant (validate-then-mutate): every rejection above
+        raises BEFORE any server state is touched — no handle is created,
+        nothing enters the arrival heap, no ``_kv_need`` entry is written
+        — so a rejected submit followed by valid submits drains
+        identically to never having submitted it.
         """
         serve = self.serve
         prompt = np.asarray(request.prompt, np.int32).reshape(-1)
@@ -545,6 +581,8 @@ class Server:
                     f"- model); truncate with max_prompt_len or shrink "
                     f"decode_len"
                 )
+        # -- all checks passed: mutate ------------------------------------
+        if self._kv_budget is not None:
             self._kv_need[i] = need
         h = RequestHandle(self, i, request, prompt, dec, on_token)
         self._handles.append(h)
@@ -644,6 +682,9 @@ class Server:
         self.report.a2a_bytes += st.a2a_bytes - self._seen["a2a"]
         self.report.collective_dispatches += (st.collective_dispatches
                                               - self._seen["cd"])
+        self.report.transfer_retries += st.transfer_retries - self._seen["retr"]
+        self.report.transfer_timeouts += (st.transfer_timeouts
+                                          - self._seen["tmo"])
         # cumulative engine totals — one engine per server, so the report's
         # arrays are simply the latest snapshot (copies: the engine keeps
         # accumulating into its own buffers)
@@ -661,7 +702,9 @@ class Server:
                       "pm": st.expert_pred_misses,
                       "lh": st.expert_lru_hits,
                       "a2a": st.a2a_bytes,
-                      "cd": st.collective_dispatches}
+                      "cd": st.collective_dispatches,
+                      "retr": st.transfer_retries,
+                      "tmo": st.transfer_timeouts}
         return d_drop
 
     def _maybe_replan(self) -> None:
@@ -703,25 +746,33 @@ class Server:
         return any(h is not None for h in self._slot_handle)
 
     def has_work(self) -> bool:
-        return self._any_live() or bool(self._pending)
+        return (self._any_live() or bool(self._pending)
+                or bool(self._ckpts))
 
     def step(self) -> bool:
         """One scheduler tick: admit due arrivals (policy-dependent), run
         one module-batched decode step over every slot, sample each live
         slot under its own ``SamplingParams``, finish/evict/recycle.
-        Returns True while work remains (live slots or queued requests);
-        with only future arrivals pending it returns True without
-        decoding — ``run()`` sleeps through such gaps, manual steppers can
-        watch ``next_arrival_s``.
+        Returns True while work remains (live slots, queued requests, or
+        preempted checkpoints); with only future arrivals pending it
+        returns True without decoding — ``run()`` sleeps through such
+        gaps, manual steppers can watch ``next_arrival_s``.
+
+        The whole tick runs with the server's fault plan armed
+        (``ServeConfig.faults``; a pass-through to the ambient
+        ``REPRO_FAULTS`` plan when unset), so every stream / page /
+        preemption seam underneath consults the same schedule.
         """
         if not self.has_work():
             return False
         self._ensure_engine()
-        self._admit()
-        if self._any_live():
-            self._decode_tick(self._chunk_T())
-            if self.serve.replan_skew is not None:
-                self._maybe_replan()
+        with faults.armed(self._faults):
+            self._maybe_preempt()
+            self._admit()
+            if self._any_live():
+                self._decode_tick(self._chunk_T())
+                if self.serve.replan_skew is not None:
+                    self._maybe_replan()
         return self.has_work()
 
     def run(self, until_idle: bool = True) -> ServeReport:
@@ -771,6 +822,16 @@ class Server:
             h = self._pop_due(now)
             if h is None:
                 break
+            # reserve the wave slot's page frames up front: an OOM (real
+            # exhaustion or injected) degrades — requeue + demote/shrink —
+            # instead of aborting mid-prefill
+            try:
+                self._engine.reserve_slot_rows([len(handles)])
+            except faults.PageAllocOOM as err:
+                heapq.heappush(self._pending, (h.arrival_s, h.index, h))
+                self._degrade_on_oom(err)
+                break
+            self._pressure = 0
             handles.append(h)
         if not handles:
             return
@@ -790,9 +851,14 @@ class Server:
         again, so loop until stable).  With an Eq. 2 budget the queue head
         WAITS while its KV bytes don't fit next to the in-flight
         sequences' (FIFO — later smaller requests are not reordered past
-        it)."""
+        it).  Preempted checkpoints resume FIRST (they were admitted
+        before anything still queued), restoring their KV rows and sampler
+        token index with zero prefill relaunches."""
         now = self._now()
-        while self._free and self._pending and self._pending[0][0] <= now:
+        self._resume_checkpoints(now)
+        blocked = False
+        while (not blocked and self._free and self._pending
+               and self._pending[0][0] <= now):
             slots, handles = [], []
             while self._free and self._pending and self._pending[0][0] <= now:
                 i = self._pending[0][1]
@@ -800,7 +866,20 @@ class Server:
                         and self._live_kv + self._kv_need[i] > self._kv_budget):
                     break              # head waits for an eviction
                 h = heapq.heappop(self._pending)[2]
-                slots.append(self._free.popleft())
+                s = self._free.popleft()
+                # page-frame reservation up front: an OOM (real exhaustion
+                # or injected) degrades — defer/demote/shrink — instead of
+                # aborting mid-prefill; the handle goes back to the head
+                try:
+                    self._engine.reserve_slot_rows([s])
+                except faults.PageAllocOOM as err:
+                    self._free.appendleft(s)
+                    heapq.heappush(self._pending, (h.arrival_s, h.index, h))
+                    self._degrade_on_oom(err)
+                    blocked = True
+                    break
+                self._pressure = 0
+                slots.append(s)
                 handles.append(h)
                 if self._kv_budget is not None:
                     self._live_kv += self._kv_need[i]
@@ -814,6 +893,129 @@ class Server:
                 and self._live_kv + self._kv_need[self._pending[0][1]]
                 > self._kv_budget):
             self.report.admission_deferrals += 1
+
+    # -- fault tolerance: preempt / checkpoint / resume --------------------
+    def preempt(self, handle: RequestHandle) -> bool:
+        """Evict a RUNNING request to a host-side checkpoint (KV/state
+        rows + current token + position; the sampler key/step restore from
+        the handle itself).  The slot, page frames and sampler slot are
+        freed for other requests; the checkpoint re-admits prefix-style
+        (``_resume_checkpoints``) with ZERO prefill relaunches, and —
+        because sampling is keyed on ``(seed, token_index)`` — the resumed
+        stream is bit-identical to an unpreempted run.
+
+        Continuous scheduler only (a static wave drains in place — its
+        slots cannot be recycled mid-wave).  Returns False when the handle
+        is not currently running."""
+        assert self.serve.scheduler == "continuous", (
+            "preemption is a continuous-scheduler policy"
+        )
+        if handle.status != "running":
+            return False
+        self._preempt_slot(self._slot_handle.index(handle), self._now())
+        return True
+
+    def _preempt_slot(self, s: int, now: float) -> None:
+        h = self._slot_handle[s]
+        ckpt = {
+            "handle": h,
+            "state": self._engine.checkpoint_slot(s),
+            "cur": int(self._cur[s]),
+            "pos": int(self._pos[s]),
+        }
+        h.status = "preempted"
+        if self._kv_budget is not None:
+            self._live_kv -= self._kv_need[h.index]
+        self._slot_handle[s] = None
+        self._sampler.clear_slot(s)
+        self._engine.evict_slots([s])
+        self._free.append(s)
+        self._ckpts.append(ckpt)
+        self.report.preemptions += 1
+        faults.note("preempt")
+
+    def _resume_checkpoints(self, now: float) -> None:
+        """Re-admit preempted checkpoints (FIFO) into free slots: restore
+        the KV/state rows eagerly, re-arm the sampler slot at the exact
+        token index already emitted (``set_slot`` + ``advance`` — the
+        determinism contract), and restore the current token/position.  No
+        prefill launch is issued."""
+        while self._ckpts and self._free:
+            h = self._ckpts[0]["handle"]
+            if (self._kv_budget is not None
+                    and self._live_kv + self._kv_need[h.index]
+                    > self._kv_budget):
+                break
+            s = self._free[0]
+            try:
+                self._engine.restore_slot(s, self._ckpts[0]["state"])
+            except faults.PageAllocOOM as err:
+                self._degrade_on_oom(err)
+                break
+            self._pressure = 0
+            ckpt = self._ckpts.popleft()
+            self._free.popleft()
+            self._sampler.set_slot(s, h.sampling)
+            self._sampler.advance([s], len(h.tokens))
+            self._slot_handle[s] = h
+            self._cur[s] = ckpt["cur"]
+            self._pos[s] = ckpt["pos"]
+            if self._kv_budget is not None:
+                self._live_kv += self._kv_need[h.index]
+            h.status = "running"
+            self.report.resumes += 1
+            faults.note("resume")
+
+    def _maybe_preempt(self) -> None:
+        """Injected preemption (chaos schedules): every
+        ``spec.preempt_every`` decode ticks, preempt the lowest-slot
+        running request (continuous only — static waves drain in place).
+        Progress is guaranteed: the checkpoint resumes at the next
+        admission and the tick clock only advances while decoding, so a
+        preempt/resume cycle always decodes between preemptions."""
+        if self.serve.scheduler != "continuous":
+            return
+        fp = faults.current()
+        if fp is None or fp.spec.preempt_every <= 0:
+            return
+        if self._preempt_due_at is None:
+            self._preempt_due_at = fp.spec.preempt_every
+        if self._ticks < self._preempt_due_at:
+            return
+        victims = [s for s in range(self._b)
+                   if self._slot_handle[s] is not None
+                   and not self._slot_handle[s].finished]
+        if not victims:
+            return
+        self._preempt_due_at = self._ticks + fp.spec.preempt_every
+        fp.note("injected:preempt")
+        self._preempt_slot(min(victims), self._now())
+
+    def _degrade_on_oom(self, err: Exception) -> None:
+        """Memory-pressure degradation ladder (counted, escalating with
+        consecutive pressure): (1) defer the admission — the handle is
+        already requeued at the head; (2) demote live device page frames
+        to the host tier; (3) shrink the fused decode-chunk cap so frames
+        recycle at finer granularity.  Fails loudly (re-raise) only when
+        the request is unservable: no fault plan armed and nothing live
+        whose eviction could ever free frames."""
+        if faults.current() is None and not self._any_live():
+            raise err
+        self._pressure += 1
+        self.report.degrade_deferrals += 1
+        faults.note("recovered:admission-deferral")
+        pages = self._engine.pages
+        if self._pressure >= 2 and pages is not None:
+            moved = pages.demote_device_frames(pages.pages_per_seq)
+            self.report.page_demotions += moved
+        if self._pressure >= 3:
+            cap = int(self.serve.decode_chunk
+                      or getattr(self.plan, "decode_chunk", 1) or 1)
+            base = self._shrink_cap if self._shrink_cap is not None else cap
+            self._shrink_cap = max(1, base // 2)
+            self._shrink_ticks = 16
+            self.report.chunk_shrinks += 1
+            faults.note("recovered:chunk-shrink")
 
     # -- shared prefill / decode / finish ----------------------------------
     def _prefill_wave(self, handles: List[RequestHandle],
@@ -901,6 +1103,24 @@ class Server:
         into a free slot mid-chunk.
         """
         cap = self.serve.decode_chunk or getattr(self.plan, "decode_chunk", 1)
+        if self._shrink_ticks > 0:
+            # memory-pressure degradation stage 3: finer chunks recycle
+            # page frames at finer granularity (decays back to the
+            # configured cap after _shrink_ticks steps)
+            cap = min(int(cap), self._shrink_cap)
+            self._shrink_ticks -= 1
+            if self._shrink_ticks == 0:
+                self._shrink_cap = None
+        fp = faults.current()
+        if (fp is not None and fp.spec.preempt_every > 0
+                and self.serve.scheduler == "continuous"):
+            # an injected preemption can only land at a chunk boundary —
+            # clamp T so the tick clock stops exactly at the next scheduled
+            # preempt (chunking-only: the decoded tokens are unchanged)
+            due = (self._preempt_due_at if self._preempt_due_at is not None
+                   else fp.spec.preempt_every)
+            if due > self._ticks:
+                cap = min(int(cap), due - self._ticks)
         if cap <= 1 or self.serve.eos_id is not None:
             return 1
         if not self._engine.fused_eligible():
@@ -910,8 +1130,8 @@ class Server:
                    for h, d in zip(self._wave["handles"], self._wave["done"])
                    if not d]
         else:
-            if self._pending and self._free:
-                return 1               # a due/future arrival could admit
+            if (self._pending or self._ckpts) and self._free:
+                return 1               # a due arrival/resume could admit
             rem = [h.decode_len - len(h.tokens)
                    for h in self._slot_handle
                    if h is not None and not h.finished]
@@ -945,6 +1165,7 @@ class Server:
         with sanitizer.allowed("token-readback"):
             mat = np.asarray(toks)  # lint: allow[MG101] the per-chunk token readback — the ONE planned d2h sync per scheduler tick
         now = self._now()
+        self._ticks += T
         self.report.decode_s += now - t0
         if wave is not None:
             wave["decode_s"] += now - t0

@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import faults
 from repro.analysis import runtime as sanitizer
 from repro.configs.base import ModelConfig
 from repro.core import workload as W
@@ -67,6 +68,15 @@ def _to_host(tree):
     return jax.tree.map(np.asarray, tree)
 
 
+class _StalledTransfer:
+    """An injected dead in-flight transfer: parked in the window like a
+    real value but never becomes ready, so ``acquire`` exercises the
+    watchdog recovery path without real wall-clock waiting."""
+
+    def __init__(self, value) -> None:
+        self.value = value
+
+
 class StreamWindow:
     """Bounded in-flight window of async htod transfers (the double buffer).
 
@@ -85,22 +95,86 @@ class StreamWindow:
     is issued under, so the runtime sanitizer can attribute traffic per
     stream (``stream-window`` for whole-module staging, ``expert-prefetch``
     for the predictive per-expert window).
+
+    Fault tolerance: every fetch consults the armed ``faults`` plan (a
+    no-op when unarmed) and retries transient failures under the shared
+    ``RetryPolicy`` with capped exponential backoff (retried copies run
+    in the ``fault-retry`` planned-transfer scope).  With a finite
+    ``retry.watchdog_s`` the blocking ``acquire`` wait polls device-buffer
+    readiness against a deadline: a dead/stalled in-flight entry is
+    abandoned and demand re-fetched once, and only then surfaces as a
+    ``StreamTimeoutError`` naming the window tag and key — the historical
+    behavior (``watchdog_s=None``) blocked forever.
     """
 
     def __init__(
         self, fetch, depth: int = 2, enabled: bool = True,
-        tag: str = "stream-window",
+        tag: str = "stream-window", retry: Optional[faults.RetryPolicy] = None,
     ) -> None:
         self._fetch = fetch
         self.tag = tag
         self.depth = max(1, depth)
         self.enabled = enabled
+        self.retry = retry if retry is not None else faults.RetryPolicy()
         self.inflight: Dict = {}
         self._order: List = []
         self.htod_bytes = 0
         self.wait_s = 0.0
         self.issued = 0
         self.demand = 0
+        self.retries = 0
+        self.timeouts = 0
+
+    def _issue(self, key):
+        """One fetch attempt, with injected transient failures."""
+        fp = faults.current()
+        if fp is not None and fp.transfer_fault(self.tag, key):
+            raise faults.TransientTransferError(
+                f"injected transient transfer fault "
+                f"(window {self.tag!r}, key {key!r})")
+        return self._fetch(key)
+
+    def _issue_with_retry(self, key, recovery: bool = False):
+        """Fetch under the shared retry policy: the first attempt runs in
+        this window's planned-transfer scope, retries in ``fault-retry``
+        (every attempt of a ``recovery`` re-fetch is retry traffic)."""
+        delay = self.retry.backoff_s
+        for attempt in range(self.retry.max_retries + 1):
+            try:
+                scope = ("fault-retry" if recovery or attempt > 0
+                         else self.tag)
+                with sanitizer.allowed(scope):
+                    return self._issue(key)
+            except faults.TransientTransferError:
+                if attempt >= self.retry.max_retries:
+                    raise
+                self.retries += 1
+                faults.note(f"recovered:transfer-retry:{self.tag}")
+                if delay > 0.0:
+                    time.sleep(min(delay, self.retry.backoff_cap_s))
+                delay = min(delay * 2.0, self.retry.backoff_cap_s or delay)
+        raise AssertionError("unreachable")
+
+    def _wait_ready(self, value) -> bool:
+        """Block until ``value``'s buffers land; ``False`` on watchdog
+        expiry (never with ``watchdog_s=None`` — unbounded wait)."""
+        if isinstance(value, _StalledTransfer):
+            return False
+        if self.retry.watchdog_s is None:
+            jax.block_until_ready(value)
+            return True
+        deadline = time.perf_counter() + self.retry.watchdog_s
+        for leaf in jax.tree.leaves(value):
+            poll = getattr(leaf, "is_ready", None)
+            if poll is None:
+                continue
+            while not poll():
+                if time.perf_counter() >= deadline:
+                    return False
+                time.sleep(0.0005)
+        jax.block_until_ready(
+            [x for x in jax.tree.leaves(value) if isinstance(x, jax.Array)])
+        return True
 
     def prefetch(self, key) -> None:
         """Stage ``key``'s transfer into the window (async; returns
@@ -110,8 +184,10 @@ class StreamWindow:
         while len(self._order) >= self.depth:
             oldest = self._order.pop(0)
             self.inflight.pop(oldest, None)
-        with sanitizer.allowed(self.tag):
-            value, nbytes = self._fetch(key)
+        value, nbytes = self._issue_with_retry(key)
+        fp = faults.current()
+        if fp is not None and fp.stall_fault(self.tag, key):
+            value = _StalledTransfer(value)
         self.inflight[key] = value
         self._order.append(key)
         self.htod_bytes += nbytes
@@ -120,18 +196,41 @@ class StreamWindow:
     def acquire(self, key):
         """Consume ``key``'s in-flight transfer (or fetch on demand),
         blocking until the copy lands; the stall is accounted in
-        ``wait_s``."""
+        ``wait_s``.  A wait that exceeds ``retry.watchdog_s`` (or an
+        injected stalled transfer) is recovered by abandoning the dead
+        entry and demand re-fetching once; a second expiry raises
+        ``StreamTimeoutError`` with the window tag and key."""
         if key in self.inflight:
             value = self.inflight.pop(key)
             self._order.remove(key)
         else:
-            with sanitizer.allowed(self.tag):
-                value, nbytes = self._fetch(key)
+            value, nbytes = self._issue_with_retry(key)
             self.htod_bytes += nbytes
             self.demand += 1
         t0 = time.perf_counter()
-        jax.block_until_ready(value)
+        ok = self._wait_ready(value)
         self.wait_s += time.perf_counter() - t0
+        if ok:
+            return value
+        self.timeouts += 1
+        faults.note(f"recovered:transfer-timeout:{self.tag}")
+        try:
+            value, nbytes = self._issue_with_retry(key, recovery=True)
+        except faults.TransientTransferError as e:
+            raise faults.StreamTimeoutError(
+                f"stalled stream transfer and the recovery fetch failed "
+                f"after {self.retry.max_retries} retries "
+                f"(window {self.tag!r}, key {key!r})") from e
+        self.htod_bytes += nbytes
+        self.demand += 1
+        t0 = time.perf_counter()
+        ok = self._wait_ready(value)
+        self.wait_s += time.perf_counter() - t0
+        if not ok:
+            raise faults.StreamTimeoutError(
+                f"stream transfer stalled twice (watchdog "
+                f"{self.retry.watchdog_s}s; window {self.tag!r}, "
+                f"key {key!r})")
         return value
 
     def take_counters(self) -> Tuple[int, float]:
@@ -139,6 +238,13 @@ class StreamWindow:
         out = (self.htod_bytes, self.wait_s)
         self.htod_bytes = 0
         self.wait_s = 0.0
+        return out
+
+    def take_fault_counters(self) -> Tuple[int, int]:
+        """Drain (retries, timeouts) since the last call."""
+        out = (self.retries, self.timeouts)
+        self.retries = 0
+        self.timeouts = 0
         return out
 
 
@@ -532,6 +638,13 @@ class ParamStore:
         b1, w1 = self._window.take_counters()
         b2, w2 = self._expert_window.take_counters()
         return b1 + b2, w1 + w2
+
+    def take_fault_counters(self) -> Tuple[int, int]:
+        """Drain (transfer retries, watchdog timeouts) since the last call
+        — summed over the whole-module and per-expert windows."""
+        r1, t1 = self._window.take_fault_counters()
+        r2, t2 = self._expert_window.take_fault_counters()
+        return r1 + r2, t1 + t2
 
     def take_expert_counters(self) -> Dict[str, int]:
         """Drain predictive-streaming hit counters since the last call:

@@ -1,0 +1,477 @@
+"""Fault injection + recovery (`repro.faults`): deterministic plans,
+retrying stream transfers, watchdog timeouts, memory-pressure degradation,
+request preempt/checkpoint/resume, and replica failover.
+
+Every recovery path must be TOKEN-IDENTICAL to the fault-free run (the
+ROADMAP recovery-semantics contract) and counted in ``ServeReport``.
+Baseline (fault-free) runs execute under ``faults.shielded()`` so the
+chaos CI job's ambient ``REPRO_FAULTS`` plan cannot perturb them.
+
+(The randomized chaos property over fault schedules lives in
+test_properties.py, the only module allowed to import hypothesis.)
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro import analysis, faults
+from repro.configs import get_config
+from repro.core.dag_builder import Plan
+from repro.models import model as M
+from repro.serving.scheduler import serve_dataset
+from repro.serving.server import Request, ServeConfig, Server
+from repro.serving.weights import StreamWindow
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _mixtral():
+    cfg = get_config("mixtral-8x7b", smoke=True)
+    return cfg, M.init_params(cfg, KEY)
+
+
+def _prompts(cfg, n, length=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return [list(map(int, rng.integers(1, cfg.vocab_size, length)))
+            for _ in range(n)]
+
+
+def _tokens(report):
+    return [list(map(int, r.tokens)) for r in report.request_results]
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: determinism, spec grammar, progress bound
+# ---------------------------------------------------------------------------
+def test_fault_spec_parse_roundtrip():
+    spec = faults.parse_spec(
+        "seed=3,transfer=0.2,stall=0.05,oom=0.1,preempt=7,kill=1@4")
+    assert spec.seed == 3
+    assert spec.transfer_rate == pytest.approx(0.2)
+    assert spec.stall_rate == pytest.approx(0.05)
+    assert spec.oom_rate == pytest.approx(0.1)
+    assert spec.preempt_every == 7
+    assert (spec.kill_replica, spec.kill_after) == (1, 4)
+    with pytest.raises(ValueError):
+        faults.parse_spec("seed=3,bogus=1")
+    with pytest.raises(ValueError):
+        faults.parse_spec("preempt")         # key with no value
+    bare = faults.parse_spec("kill=1")       # bare kill: fleet step 1
+    assert (bare.kill_replica, bare.kill_after) == (1, 1)
+
+
+def test_fault_plan_draws_are_deterministic():
+    """Same spec => identical injection schedule, replayable forever; a
+    different seed reshuffles it.  Draws never consult wall-clock or
+    Python's salted hash."""
+    mk = lambda s: faults.FaultPlan(faults.parse_spec(s))
+    a = mk("seed=11,transfer=0.5")
+    b = mk("seed=11,transfer=0.5")
+    seq_a = [a.transfer_fault("w", k % 3) for k in range(64)]
+    seq_b = [b.transfer_fault("w", k % 3) for k in range(64)]
+    assert seq_a == seq_b
+    assert any(seq_a) and not all(seq_a)
+    c = mk("seed=12,transfer=0.5")
+    assert [c.transfer_fault("w", k % 3) for k in range(64)] != seq_a
+
+
+def test_fault_plan_never_fails_twice_consecutively():
+    """The progress bound: even at rate 1.0 a site never fails twice in a
+    row, so ANY retry policy with max_retries >= 1 always completes."""
+    fp = faults.FaultPlan(faults.parse_spec("seed=0,transfer=1.0,oom=1.0"))
+    draws = [fp.transfer_fault("stream-window", 5) for _ in range(20)]
+    assert draws == [True, False] * 10
+    ooms = [fp.page_oom() for _ in range(10)]
+    assert not any(a and b for a, b in zip(ooms, ooms[1:]))
+
+
+def test_fault_resolve_coercions():
+    assert faults.resolve(None) is None
+    fp = faults.resolve("seed=1,transfer=0.1")
+    assert isinstance(fp, faults.FaultPlan)
+    assert faults.resolve(fp) is fp
+    assert faults.resolve(fp.spec).spec == fp.spec
+
+
+def test_fault_plan_event_ledger_and_report():
+    fp = faults.resolve("seed=0,transfer=1.0")
+    with faults.armed(fp):
+        faults.note("recovered:test-event")
+        faults.note("recovered:test-event", 2)
+    rep = fp.report()
+    assert rep["spec"]["transfer_rate"] == 1.0
+    assert rep["events"]["recovered:test-event"] == 3
+
+
+def test_shielded_masks_the_armed_plan():
+    fp = faults.resolve("seed=0,transfer=1.0")
+    with faults.armed(fp):
+        assert faults.current() is fp
+        with faults.shielded():
+            assert faults.current() is None
+        assert faults.current() is fp
+
+
+# ---------------------------------------------------------------------------
+# StreamWindow: retry, stall recovery, watchdog timeout (satellite a)
+# ---------------------------------------------------------------------------
+def _counting_fetch():
+    calls = []
+
+    def fetch(key):
+        calls.append(key)
+        return np.full((4,), float(key)), 32
+
+    return fetch, calls
+
+
+def test_stream_window_retries_transient_faults():
+    """At transfer rate 1.0 every first attempt fails; the never-twice
+    bound makes the first retry succeed — acquire returns the value and
+    counts the retry."""
+    fetch, calls = _counting_fetch()
+    win = StreamWindow(fetch, tag="stream-window")
+    with faults.armed(faults.resolve("seed=0,transfer=1.0")):
+        out = win.acquire(7)
+    assert np.array_equal(out, np.full((4,), 7.0))
+    assert win.retries >= 1
+    assert len(calls) == 1          # the injected failure never reached fetch
+
+
+def test_stream_window_retry_exhaustion_raises_transient():
+    """With retries disabled the injected failure surfaces as the typed
+    ``TransientTransferError`` (a ``FaultError`` — replica failover
+    material, not a silent hang)."""
+    fetch, _ = _counting_fetch()
+    win = StreamWindow(fetch, tag="stream-window",
+                       retry=faults.RetryPolicy(max_retries=0))
+    with faults.armed(faults.resolve("seed=0,transfer=1.0")):
+        with pytest.raises(faults.TransientTransferError):
+            win.acquire(7)
+
+
+def test_stream_window_stalled_prefetch_recovers_via_demand_fetch():
+    """An injected dead in-flight transfer (stall) is abandoned by the
+    watchdog and demand re-fetched once: acquire still returns the right
+    value, and the timeout is counted."""
+    fetch, calls = _counting_fetch()
+    win = StreamWindow(fetch, tag="stream-window",
+                       retry=faults.RetryPolicy(watchdog_s=0.01))
+    with faults.armed(faults.resolve("seed=0,stall=1.0")):
+        win.prefetch(3)
+        out = win.acquire(3)
+    assert np.array_equal(out, np.full((4,), 3.0))
+    assert win.timeouts == 1
+    assert calls == [3, 3]          # prefetch + the recovery demand fetch
+
+
+class _NeverReady:
+    """A fake device buffer whose transfer never lands."""
+
+    def is_ready(self) -> bool:
+        return False
+
+
+def test_stream_window_acquire_watchdog_regression():
+    """Regression for the unbounded ``acquire()`` block: a transfer that
+    never becomes ready used to hang forever; with a watchdog it now
+    surfaces as ``StreamTimeoutError`` naming the window tag and key."""
+    win = StreamWindow(lambda key: (_NeverReady(), 8), tag="expert-prefetch",
+                       retry=faults.RetryPolicy(watchdog_s=0.01))
+    with pytest.raises(faults.StreamTimeoutError) as ei:
+        win.acquire((2, 5))
+    msg = str(ei.value)
+    assert "expert-prefetch" in msg and "(2, 5)" in msg
+    assert win.timeouts >= 1
+
+
+def test_stream_window_unarmed_counters_stay_zero():
+    fetch, _ = _counting_fetch()
+    win = StreamWindow(fetch)
+    with faults.shielded():
+        win.prefetch(0)
+        win.acquire(0)
+        win.acquire(1)
+    assert (win.retries, win.timeouts) == (0, 0)
+    assert win.take_fault_counters() == (0, 0)
+
+
+# ---------------------------------------------------------------------------
+# Server.submit hardening (satellite b)
+# ---------------------------------------------------------------------------
+def test_rejected_submit_leaves_server_state_untouched():
+    """Validate-then-mutate: a rejected submit must not leak a handle, a
+    heap entry, or KV bookkeeping — subsequent valid submits drain
+    identically to a server that never saw the rejection."""
+    cfg, params = _mixtral()
+    plan = Plan(B=2, b_a=2, b_e=16, omega=0.0)
+    prompts = _prompts(cfg, 2, 6)
+    mk = lambda: ServeConfig(scheduler="continuous", decode_len=4, max_seq=10)
+
+    with faults.shielded():
+        clean = Server(cfg, params, plan, serve=mk())
+        for p in prompts:
+            clean.submit(Request(p, 4))
+        want = _tokens(clean.run())
+
+        srv = Server(cfg, params, plan, serve=mk())
+        with pytest.raises(ValueError):
+            srv.submit(Request(list(range(1, 30)), 4))   # beyond max_seq
+        with pytest.raises(ValueError):
+            srv.submit(Request(prompts[0], 4, arrival_s=float("nan")))
+        assert len(srv._handles) == 0
+        assert len(srv._pending) == 0
+        assert srv._kv_need == {}
+        handles = [srv.submit(Request(p, 4)) for p in prompts]
+        assert [h.index for h in handles] == [0, 1]   # indices unperturbed
+        got = _tokens(srv.run())
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# Recovery end-to-end: token identity + nonzero counters
+# ---------------------------------------------------------------------------
+def test_transfer_faults_recover_token_identical_streamed():
+    """Streamed weights under injected transient faults + stalls: served
+    tokens equal the fault-free run, with retries/timeouts counted all the
+    way into the ServeReport."""
+    cfg, params = _mixtral()
+    plan = Plan(B=4, b_a=2, b_e=64, omega=0.0)
+    prompts = _prompts(cfg, 4)
+    with faults.shielded():
+        base = serve_dataset(cfg, params, [Request(p, 6) for p in prompts],
+                             plan, 6, scheduler="continuous",
+                             stream_weights=True, resident_bytes=0)
+    armed = serve_dataset(cfg, params, [Request(p, 6) for p in prompts],
+                          plan, 6, scheduler="continuous",
+                          stream_weights=True, resident_bytes=0,
+                          faults="seed=5,transfer=0.3,stall=0.1")
+    assert _tokens(armed) == _tokens(base)
+    assert armed.transfer_retries > 0
+    assert base.prefill_tokens == armed.prefill_tokens
+
+
+def test_page_oom_degrades_and_completes_token_identical():
+    """Injected page-alloc OOM hits the degradation ladder (defer ->
+    demote -> shrink) instead of raising; the run completes with the
+    fault-free tokens and the deferrals counted."""
+    cfg, params = _mixtral()
+    plan = Plan(B=4, b_a=2, b_e=64, omega=0.0)
+    prompts = _prompts(cfg, 4)
+    with faults.shielded():
+        base = serve_dataset(cfg, params, [Request(p, 6) for p in prompts],
+                             plan, 6, scheduler="continuous",
+                             kv_page_tokens=4)
+    armed = serve_dataset(cfg, params, [Request(p, 6) for p in prompts],
+                          plan, 6, scheduler="continuous", kv_page_tokens=4,
+                          faults="seed=2,oom=0.5")
+    assert _tokens(armed) == _tokens(base)
+    assert armed.degrade_deferrals > 0
+
+
+def test_page_table_oom_is_typed_and_transactional():
+    """REAL frame exhaustion (no fault plan) raises the typed
+    ``PageAllocOOM`` — not a bare assert — and rolls the partial row back
+    so the admission layer can retry without leaking frames."""
+    from repro.serving.cache import CacheConfig, KVPageTable
+
+    cfg, _ = _mixtral()
+    schema = [(cfg.layer_kind(i), cfg.ffn_kind(i))
+              for i in range(cfg.num_layers)]
+    tbl = KVPageTable(cfg, schema, batch=2, max_seq=8,
+                      cache_cfg=CacheConfig(page_tokens=4))
+    assert tbl.pages_per_seq == 2
+    with faults.shielded():
+        tbl.ensure_rows([0])
+        # leave exactly ONE free frame: row 1 allocates it, fails on its
+        # second page, and must give it back
+        tbl._free_dev, spare = tbl._free_dev[:1], tbl._free_dev[1:]
+        with pytest.raises(faults.PageAllocOOM):
+            tbl.ensure_rows([1])
+        assert (tbl.page_map[1] == -1).all()
+        assert len(tbl._free_dev) == 1            # rollback returned it
+        tbl._free_dev += spare
+        tbl.ensure_rows([1])                      # retry succeeds
+        assert (tbl.page_map[1] >= 0).all()
+
+
+def test_injected_preemption_resumes_token_identical_zero_prefill():
+    """The checkpoint/resume contract: an injected preemption schedule
+    evicts running requests to host checkpoints and re-admits them with
+    ZERO extra prefill launches; sampling keyed on (seed, token_index)
+    makes the streams bit-identical."""
+    cfg, params = _mixtral()
+    plan = Plan(B=4, b_a=2, b_e=64, omega=0.0)
+    prompts = _prompts(cfg, 4)
+    with faults.shielded():
+        base = serve_dataset(cfg, params, [Request(p, 8) for p in prompts],
+                             plan, 8, scheduler="continuous")
+    armed = serve_dataset(cfg, params, [Request(p, 8) for p in prompts],
+                          plan, 8, scheduler="continuous",
+                          faults="seed=3,preempt=3")
+    assert _tokens(armed) == _tokens(base)
+    assert armed.preemptions > 0
+    assert armed.resumes == armed.preemptions
+    # zero prefill relaunches: resume restores rows, it never re-prefills
+    assert armed.prefill_tokens == base.prefill_tokens
+
+
+def test_public_preempt_api_mid_run():
+    """`Server.preempt(handle)` is the manual seam the injected schedule
+    drives: evict a running request mid-drain, finish the rest, and the
+    preempted stream still completes bit-identical."""
+    cfg, params = _mixtral()
+    plan = Plan(B=2, b_a=2, b_e=16, omega=0.0, decode_chunk=1)
+    prompts = _prompts(cfg, 2)
+    with faults.shielded():
+        clean = Server(cfg, params, plan,
+                       serve=ServeConfig(scheduler="continuous", decode_len=6))
+        for p in prompts:
+            clean.submit(Request(p, 6))
+        want = _tokens(clean.run())
+
+        srv = Server(cfg, params, plan,
+                     serve=ServeConfig(scheduler="continuous", decode_len=6))
+        handles = [srv.submit(Request(p, 6)) for p in prompts]
+        srv.step()
+        srv.step()
+        assert handles[0].status == "running"
+        assert srv.preempt(handles[0])
+        assert handles[0].status == "preempted"
+        assert not srv.preempt(handles[0])     # not running: no-op
+        got = _tokens(srv.run())
+    assert got == want
+    assert srv.report.preemptions == 1 and srv.report.resumes == 1
+
+
+def test_preemption_with_paged_kv_checkpoints_page_rows():
+    """Mode B (host-tier pages): the checkpoint reads the slot's rows out
+    of the page table and the resume re-reserves frames — still
+    token-identical."""
+    cfg, params = _mixtral()
+    plan = Plan(B=4, b_a=2, b_e=64, omega=0.0)
+    prompts = _prompts(cfg, 4)
+    with faults.shielded():
+        base = serve_dataset(cfg, params, [Request(p, 8) for p in prompts],
+                             plan, 8, scheduler="continuous",
+                             kv_page_tokens=4, device_kv_gb=1e-9)
+    armed = serve_dataset(cfg, params, [Request(p, 8) for p in prompts],
+                          plan, 8, scheduler="continuous",
+                          kv_page_tokens=4, device_kv_gb=1e-9,
+                          faults="seed=4,preempt=3")
+    assert _tokens(armed) == _tokens(base)
+    assert armed.preemptions > 0
+
+
+def test_replica_kill_fails_over_token_identical():
+    """The failover contract: a replica killed mid-drain loses its KV but
+    its unfinished requests resubmit onto survivors and the merged drain
+    is token-identical to a single fault-free Server."""
+    from repro.distributed import ReplicaServer
+
+    cfg, params = _mixtral()
+    plan = Plan(B=4, b_a=2, b_e=64, omega=0.0, decode_chunk=1)
+    prompts = _prompts(cfg, 6)
+    with faults.shielded():
+        srv = Server(cfg, params, plan,
+                     serve=ServeConfig(scheduler="continuous", decode_len=6))
+        for p in prompts:
+            srv.submit(Request(p, 6))
+        want = _tokens(srv.run())
+
+        rs = ReplicaServer(
+            cfg, params, 2, plan=plan,
+            serve=ServeConfig(scheduler="continuous", decode_len=6,
+                              faults="seed=1,kill=1@3"),
+            policy="round-robin")
+        for p in prompts:
+            rs.submit(Request(p, 6))
+        rrep = rs.run()
+    merged = rrep.merged
+    assert _tokens(merged) == want
+    assert merged.failovers == 1
+    assert merged.requeued_requests > 0
+    assert len(merged.request_results) == len(prompts)
+
+
+def test_replica_kill_with_no_survivors_fails_loudly():
+    from repro.distributed import ReplicaServer
+
+    cfg, params = _mixtral()
+    plan = Plan(B=2, b_a=2, b_e=16, omega=0.0, decode_chunk=1)
+    with faults.shielded():
+        rs = ReplicaServer(
+            cfg, params, 1, plan=plan,
+            serve=ServeConfig(scheduler="continuous", decode_len=4,
+                              faults="seed=0,kill=0@1"))
+        rs.submit(Request(_prompts(cfg, 1)[0], 4))
+        with pytest.raises(faults.FaultError):
+            rs.run()
+
+
+# ---------------------------------------------------------------------------
+# Unarmed no-op (acceptance criterion) + sanitizer integration
+# ---------------------------------------------------------------------------
+@pytest.mark.skipif(bool(os.environ.get("REPRO_FAULTS")),
+                    reason="ambient chaos plan armed: unarmed-noop "
+                           "byte-identity is not observable")
+def test_unarmed_serving_is_byte_identical_noop():
+    """With no fault plan, the fault seams add NOTHING: no fault-scope
+    transfers, no retries, no checkpoints — strict sanitizer clean."""
+    cfg, params = _mixtral()
+    plan = Plan(B=4, b_a=2, b_e=64, omega=0.0)
+    prompts = _prompts(cfg, 4)
+    with analysis.sanitize(strict=True) as san:
+        rep = serve_dataset(cfg, params, [Request(p, 6) for p in prompts],
+                            plan, 6, scheduler="continuous",
+                            stream_weights=True, resident_bytes=0,
+                            kv_page_tokens=4)
+    r = san.report()
+    assert not any(t in r["planned_transfers"]
+                   for t in ("fault-retry", "ckpt-save", "ckpt-restore"))
+    assert rep.transfer_retries == 0 and rep.transfer_timeouts == 0
+    assert rep.preemptions == 0 and rep.resumes == 0
+    assert rep.degrade_deferrals == 0 and rep.chunk_shrinks == 0
+    assert rep.failovers == 0 and rep.requeued_requests == 0
+
+
+def test_armed_recovery_is_strict_sanitizer_clean():
+    """Every recovery transfer rides a planned scope: the full chaos mix
+    passes under sanitize(strict=True)."""
+    cfg, params = _mixtral()
+    plan = Plan(B=4, b_a=2, b_e=64, omega=0.0)
+    prompts = _prompts(cfg, 4)
+    with analysis.sanitize(strict=True):
+        rep = serve_dataset(
+            cfg, params, [Request(p, 8) for p in prompts], plan, 8,
+            scheduler="continuous", stream_weights=True, resident_bytes=0,
+            kv_page_tokens=4,
+            faults="seed=5,transfer=0.3,stall=0.1,oom=0.3,preempt=3")
+    assert rep.transfer_retries > 0
+    assert rep.preemptions > 0
+
+
+def test_fault_report_records_injections_and_recoveries():
+    cfg, params = _mixtral()
+    plan = Plan(B=4, b_a=2, b_e=64, omega=0.0)
+    prompts = _prompts(cfg, 4)
+    fp = faults.resolve("seed=5,transfer=0.3,stall=0.1")
+    serve_dataset(cfg, params, [Request(p, 6) for p in prompts], plan, 6,
+                  scheduler="continuous", stream_weights=True,
+                  resident_bytes=0, faults=fp)
+    rep = fp.report()
+    assert any(k.startswith("injected:transfer") for k in rep["events"])
+    assert any(k.startswith("recovered:transfer-retry") for k in rep["events"])
+
+
+def test_launch_serve_exposes_faults_flag():
+    """The launcher surface: ``--faults SPEC`` threads into ServeConfig
+    and the recovery counters are printed after the run."""
+    from repro.launch import serve as launch_serve
+
+    src = open(launch_serve.__file__).read()
+    assert "--faults" in src
+    assert "faults=args.faults" in src
+    assert "transfer_retries" in src and "failovers" in src

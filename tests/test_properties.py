@@ -482,3 +482,69 @@ def test_predictive_streaming_token_identical(khat, mode, lru, sched, seed):
     rep = server.finalize()
     for a, b in zip(base[sched].request_results, rep.request_results):
         assert np.array_equal(a.tokens, b.tokens)
+
+
+# ---------------------------------------------------------------------------
+# Fault tolerance: chaos schedules are token-invisible (ISSUE 10)
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=1)
+def _chaos_fixture():
+    """Model + per-scheduler fault-free baselines (under faults.shielded()
+    so an ambient REPRO_FAULTS chaos plan cannot perturb them).  Streamed
+    weights + Mode B paging so every injection seam — weight window,
+    page window, page allocator, preemption — is actually on the path."""
+    from repro import faults
+    from repro.serving.scheduler import Request, serve_dataset
+
+    cfg = get_config("mixtral-8x7b", smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    plan = Plan(B=4, b_a=2, b_e=64, omega=0.0)
+    rng = np.random.default_rng(29)
+    prompts = [rng.integers(1, cfg.vocab_size, 8).tolist() for _ in range(4)]
+    make = lambda: [Request([int(t) for t in p], 8) for p in prompts]
+    kw = dict(stream_weights=True, resident_bytes=0, kv_page_tokens=4,
+              device_kv_gb=1e-9)
+    with faults.shielded():
+        base = {s: serve_dataset(cfg, params, make(), plan, 8, scheduler=s,
+                                 **kw)
+                for s in ("static", "continuous")}
+    return cfg, params, plan, make, kw, base
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    transfer=st.sampled_from([0.0, 0.2, 0.5]),
+    stall=st.sampled_from([0.0, 0.15]),
+    oom=st.sampled_from([0.0, 0.4]),
+    preempt=st.sampled_from([0, 3, 5]),
+    scheduler=st.sampled_from(["static", "continuous"]),
+)
+def test_chaos_schedules_are_token_identical(seed, transfer, stall, oom,
+                                             preempt, scheduler):
+    """The recovery contract, adversarially: for ANY seeded fault plan
+    mixing transient transfer failures, stalled in-flight copies, page
+    OOMs, and preemption schedules, over EITHER scheduler, serving
+    recovers to the exact fault-free token streams under
+    sanitize(strict=True) — and every recovery is visible in the report
+    counters, never silent."""
+    from repro import analysis, faults
+    from repro.serving.scheduler import serve_dataset
+
+    cfg, params, plan, make, kw, base = _chaos_fixture()
+    spec = (f"seed={seed},transfer={transfer},stall={stall},oom={oom},"
+            f"preempt={preempt}")
+    with analysis.sanitize(strict=True):
+        rep = serve_dataset(cfg, params, make(), plan, 8,
+                            scheduler=scheduler, faults=spec, **kw)
+    for a, b in zip(base[scheduler].request_results, rep.request_results):
+        assert np.array_equal(a.tokens, b.tokens), (spec, scheduler, a.index)
+    # resumed checkpoints never relaunch prefill
+    assert rep.prefill_tokens == base[scheduler].prefill_tokens
+    recovered = (rep.transfer_retries + rep.transfer_timeouts +
+                 rep.preemptions + rep.degrade_deferrals)
+    fp = faults.resolve(spec)
+    if transfer == 0.0 and stall == 0.0 and oom == 0.0 and (
+            preempt == 0 or scheduler == "static"):
+        assert recovered == 0, spec
+    assert isinstance(fp, faults.FaultPlan)
